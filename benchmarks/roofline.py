@@ -1,0 +1,112 @@
+"""Roofline analysis from the dry-run artifacts (experiments/dryrun/*.json).
+
+Per (arch x shape x mesh) cell, with TPU v5e targets:
+    compute term    = FLOPs_dev / 197e12            [s]
+    memory term     = bytes_dev / 819e9             [s]
+    collective term = collective_bytes_dev / 50e9   [s]
+(dry-run numbers are per-device, so dividing by per-chip peaks matches the
+assignment's global/chips formulation).  MODEL_FLOPS = 6*N*D for training
+(N = active params for MoE), 2*N*D for inference cells.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import OUT_DIR, Row
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def model_flops(cell: dict) -> float:
+    n = cell["params_active"]
+    d = cell["tokens"]
+    per_tok = 6.0 if cell["kind"] == "train" else 2.0
+    return per_tok * n * d
+
+
+def analyze_cell(cell: dict) -> dict:
+    devices = cell["devices"]
+    compute = cell["flops_per_device"] / PEAK_FLOPS
+    memory = cell["bytes_per_device"] / HBM_BW
+    coll = cell["collectives"]["total"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cell)
+    hlo_global = cell["flops_per_device"] * devices
+    bound = max(terms.values())
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "kind": cell["kind"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": compute / bound if bound > 0 else 0.0,
+        "hbm_args_gib": (cell["memory"]["argument_bytes"] or 0) / 2**30,
+        "hbm_temp_gib": (cell["memory"]["temp_bytes"] or 0) / 2**30,
+    }
+
+
+HINTS = {
+    "memory": "fuse attention score chain (Pallas flash kernel) / "
+              "sequence-parallel activations to cut HBM traffic",
+    "collective": "reshard GQA KV (replicate small KV heads instead of "
+                  "splitting head_dim) and reduce-scatter gradients",
+    "compute": "compute-bound: increase arithmetic intensity only via "
+               "larger per-device batch or faster kernels",
+}
+
+
+def load_cells(mesh: str | None = "single_pod_16x16") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("status") != "ok":
+            continue
+        if mesh and cell["mesh"] != mesh:
+            continue
+        cells.append(cell)
+    return cells
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    table = []
+    for cell in load_cells(mesh=None):
+        if cell["mesh"] != "single_pod_16x16":
+            continue  # roofline table is single-pod per the assignment
+        a = analyze_cell(cell)
+        table.append(a)
+        derived = (f"compute={a['compute_s']:.4f}s;"
+                   f"memory={a['memory_s']:.4f}s;"
+                   f"collective={a['collective_s']:.4f}s;"
+                   f"dominant={a['dominant']};"
+                   f"useful={a['useful_ratio']:.3f};"
+                   f"roofline_frac={a['roofline_fraction']:.3f}")
+        rows.append(Row(f"roofline/{a['arch']}/{a['shape']}",
+                        cell.get("compile_s", 0) * 1e6, derived))
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "roofline.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    return rows
+
+
+def markdown_table(mesh: str = "single_pod_16x16") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | roofline frac | next lever |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for cell in load_cells(mesh=mesh):
+        a = analyze_cell(cell)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.4f} | "
+            f"{a['memory_s']:.4f} | {a['collective_s']:.4f} | "
+            f"{a['dominant']} | {a['useful_ratio']:.3f} | "
+            f"{a['roofline_fraction']:.3f} | {HINTS[a['dominant']]} |")
+    return "\n".join(lines)

@@ -1,0 +1,72 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run           # reduced scale
+    PYTHONPATH=src python -m benchmarks.run --full    # paper scale
+    PYTHONPATH=src python -m benchmarks.run --only fig6,roofline
+
+Prints ``name,us_per_call,derived`` CSV (also written to
+experiments/bench/results.csv).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+SUITES = ("tab1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+          "kernels", "des", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale microbatches and solver budgets")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    args = ap.parse_args()
+    picked = [s.strip() for s in args.only.split(",") if s.strip()] or \
+        list(SUITES)
+
+    from benchmarks import (des_bench, fig6_bandwidth, fig7_rates,
+                            fig8_seqlen, fig9_ports, fig10_realloc,
+                            fig11_exectime, kernels_bench, roofline,
+                            tab1_workloads)
+    from benchmarks.common import OUT_DIR
+
+    modules = {"tab1": tab1_workloads, "fig6": fig6_bandwidth,
+               "fig7": fig7_rates, "fig8": fig8_seqlen,
+               "fig9": fig9_ports, "fig10": fig10_realloc,
+               "fig11": fig11_exectime, "kernels": kernels_bench,
+               "des": des_bench, "roofline": roofline}
+
+    print("name,us_per_call,derived")
+    lines = ["name,us_per_call,derived"]
+    t_start = time.time()
+    failures = []
+    for s in picked:
+        mod = modules[s]
+        t0 = time.time()
+        try:
+            for row in mod.run(full=args.full):
+                lines.append(row.emit())
+        except Exception as exc:   # noqa: BLE001
+            failures.append(s)
+            print(f"{s}/ERROR,0,{type(exc).__name__}:{exc}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {s} done in {time.time()-t0:.1f}s", flush=True)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "results.csv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# total {time.time()-t_start:.1f}s -> {OUT_DIR}/results.csv",
+          flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Table I: evaluation workload configurations + derived DAG statistics."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Row, WORKLOADS, bench_dag, save_json
+from repro.configs import PAPER_WORKLOADS
+from repro.core.des import DESProblem
+from repro.core.pruning import profile_anchors
+
+
+def run(full: bool = False) -> list[Row]:
+    rows = []
+    payload = {}
+    for w in WORKLOADS:
+        plan = PAPER_WORKLOADS[w].plan
+        t0 = time.time()
+        dag = bench_dag(w, full=full)
+        build_us = (time.time() - t0) * 1e6
+        _, _, K = profile_anchors(DESProblem(dag))
+        s = dag.summary()
+        derived = (f"tp={plan.tp};pp={plan.pp};dp={plan.dp};"
+                   f"gpus={plan.num_gpus};tasks={s['num_tasks']};"
+                   f"deps={s['num_deps']};pods={s['num_pods']};K={K};"
+                   f"gb_per_iter={s['total_volume_gb']:.1f}")
+        payload[w] = {**s, "K": K}
+        rows.append(Row(f"tab1/{w}", build_us, derived))
+    save_json("tab1_workloads", payload)
+    return rows

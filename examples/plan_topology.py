@@ -1,0 +1,59 @@
+"""Plan OCS topologies for the paper's large workloads and reproduce the
+port-saving + reallocation story (Figs. 9/10 direction) at reduced scale.
+
+    PYTHONPATH=src python examples/plan_topology.py [--full]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np                                             # noqa: E402
+
+from repro.configs import PAPER_WORKLOADS, make_job            # noqa: E402
+from repro.core.api import optimize                            # noqa: E402
+from repro.core.ga import GAOptions                            # noqa: E402
+from repro.core.milp import MILPOptions                        # noqa: E402
+from repro.core.schedule import build_comm_dag                 # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale microbatch counts (slow)")
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    args = ap.parse_args()
+    arch = PAPER_WORKLOADS[args.arch]
+    mb = arch.plan.num_microbatches if args.full else 2 * arch.plan.pp
+    job = make_job(arch, microbatches=mb)
+    dag = build_comm_dag(job, inter_pod_gbps=400.0)
+    print(f"{args.arch}: {dag.num_real_tasks} tasks, "
+          f"{dag.cluster.num_pods} pods")
+
+    fast = optimize(dag, "delta-fast",
+                    ga_options=GAOptions(seed=0, time_limit=60))
+    print(f"delta-fast : NCT={fast.nct:.4f} ports={fast.total_ports}")
+    saved = optimize(dag, "delta-joint", port_min=True,
+                     milp_options=MILPOptions(time_limit=240))
+    if saved.feasible:
+        U = np.asarray(dag.cluster.port_limits)
+        used = saved.x.sum(axis=1)
+        print(f"delta-joint+port-min: NCT={saved.nct:.4f} "
+              f"ports={saved.total_ports} "
+              f"(ratio {saved.total_ports/U.sum():.2f})")
+        # reallocate surplus to the reversed-placement co-tenant
+        dag_t = build_comm_dag(job, inter_pod_gbps=400.0,
+                               reverse_stages=True)
+        boosted = dag_t.cluster.with_port_limits(U + (U - used))
+        dag_b = build_comm_dag(job, inter_pod_gbps=400.0,
+                               reverse_stages=True, cluster=boosted)
+        r0 = optimize(dag_t, "delta-fast",
+                      ga_options=GAOptions(seed=0, time_limit=60))
+        r1 = optimize(dag_b, "delta-fast",
+                      ga_options=GAOptions(seed=0, time_limit=60))
+        print(f"co-tenant Model^T: NCT {r0.nct:.4f} -> {r1.nct:.4f} "
+              f"after port reallocation")
+
+
+if __name__ == "__main__":
+    main()

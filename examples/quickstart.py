@@ -1,0 +1,45 @@
+"""Quickstart: plan an OCS logical topology for a small LLM training job.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's GPT-7B profiling workload (Fig. 1), derives its reduced
+inter-pod communication DAG, and compares DELTA-Fast against the
+traffic-matrix baselines.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import PAPER_WORKLOADS, make_job            # noqa: E402
+from repro.core.api import compare                             # noqa: E402
+from repro.core.ga import GAOptions                            # noqa: E402
+from repro.core.schedule import build_comm_dag                 # noqa: E402
+
+
+def main(fast: bool = False) -> None:
+    arch = PAPER_WORKLOADS["gpt-7b"]
+    job = make_job(arch, seq_len=4096,
+                   microbatches=4 if fast else arch.plan.num_microbatches)
+    dag = build_comm_dag(job, inter_pod_gbps=400.0)
+    s = dag.summary()
+    print(f"job {job.name}: tp={job.tp} pp={job.pp} dp={job.dp} "
+          f"mb={job.num_microbatches}")
+    print(f"inter-pod DAG: {s['num_tasks']} tasks, {s['num_deps']} deps, "
+          f"{s['num_pods']} pods, {s['total_volume_gb']:.1f} GB/iteration")
+
+    ga = GAOptions(seed=0, time_limit=10 if fast else 60,
+                   patience=15 if fast else 60)
+    plans = compare(dag, methods=("prop-alloc", "sqrt-alloc", "iter-halve",
+                                  "delta-fast"), ga_options=ga)
+    print(f"\n{'method':<14s} {'NCT':>8s} {'makespan':>12s} {'ports':>6s}")
+    for name, r in plans.items():
+        print(f"{name:<14s} {r.nct:8.4f} {r.makespan*1e3:10.2f}ms "
+              f"{r.total_ports:6d}")
+    best = min(plans.values(), key=lambda r: r.nct)
+    print(f"\nbest: {best.method} (NCT {best.nct:.4f})")
+    print("planned circuits x_ij (row i -> col j):")
+    print(best.x)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import subprocess
+import sys
+
+
+def main() -> None:
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", "qwen3-0.6b", "--reduce",
+           "--batch", "4", "--prompt-len", "64", "--decode-steps", "32"]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd, env={"PYTHONPATH": "src",
+                                               "PATH": "/usr/bin:/bin",
+                                               "HOME": "/root"}))
+
+
+if __name__ == "__main__":
+    main()

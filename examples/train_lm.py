@@ -1,0 +1,32 @@
+"""End-to-end driver: plan the fabric with DELTA, then train a ~100M-class
+model for a few hundred steps on synthetic data with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~5 min on CPU
+    PYTHONPATH=src python examples/train_lm.py --quick    # CI-sized
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+    steps = "60" if args.quick else "300"
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen3-0.6b", "--reduce",
+           "--steps", steps, "--batch", "8", "--seq", "128",
+           "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+           "--plan-topology",
+           "--simulate-failure", "75" if not args.quick else "-1",
+           "--log-every", "20"]
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd, env={"PYTHONPATH": "src",
+                                               "PATH": "/usr/bin:/bin",
+                                               "HOME": "/root"}))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Cluster and placement model for OCS-AIDC topology optimization.
+
+Pods are interconnected by optical circuit switches (OCS); within a pod the
+electrical network is treated as non-blocking (intra-pod tasks are collapsed
+into the rigid deltas of the reduced DAG, per paper Sec. III-A).
+
+Units used throughout repro.core:
+    time        -> seconds
+    data volume -> bytes
+    bandwidth   -> bytes / second
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+GBPS = 1e9 / 8.0  # 1 Gb/s in bytes/s
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """A set of pods with OCS port budgets and per-NIC injection bandwidth.
+
+    Attributes:
+      num_pods:     number of pods |P| hosting the job.
+      port_limits:  U_p -- max OCS ports available to this job per pod.  The
+                    paper constrains U_p to the number of GPUs the job owns in
+                    pod p (fairness); callers can pass larger budgets to model
+                    surplus-port reallocation (Fig. 10).
+      nic_bandwidth: B -- injection bandwidth of a single NIC == capacity of a
+                    single OCS port (bytes/s).
+      intra_pod_bandwidth: per-GPU intra-pod electrical bandwidth used only to
+                    derive durations of intra-pod communication before DAG
+                    reduction (bytes/s).
+    """
+
+    num_pods: int
+    port_limits: tuple[int, ...]
+    nic_bandwidth: float
+    intra_pod_bandwidth: float = 900e9
+
+    def __post_init__(self) -> None:
+        if len(self.port_limits) != self.num_pods:
+            raise ValueError(
+                f"port_limits has {len(self.port_limits)} entries, expected "
+                f"{self.num_pods}")
+        if self.nic_bandwidth <= 0:
+            raise ValueError("nic_bandwidth must be positive")
+
+    @classmethod
+    def uniform(cls, num_pods: int, ports_per_pod: int,
+                nic_bandwidth: float, **kw) -> "ClusterSpec":
+        return cls(num_pods=num_pods,
+                   port_limits=(ports_per_pod,) * num_pods,
+                   nic_bandwidth=nic_bandwidth, **kw)
+
+    def with_port_limits(self, port_limits: Sequence[int]) -> "ClusterSpec":
+        return dataclasses.replace(self, port_limits=tuple(port_limits))
+
+
+@dataclass(frozen=True)
+class Placement:
+    """Maps (replica, stage, tp_rank) -> (pod, global gpu id).
+
+    Fragmented multi-tenant placement (paper Sec. V-A1): each DP replica owns
+    `gpus_per_pod_per_replica` GPUs in each pod it touches, so a replica with
+    tp*pp GPUs spans ceil(tp*pp / gppr) pods, stages packed contiguously.
+    `reverse_stages=True` gives the Model^T deployment of Fig. 10 (reversed
+    stage-to-pod mapping over the same pods).
+    """
+
+    tp: int
+    pp: int
+    dp: int
+    gpus_per_pod_per_replica: int
+    reverse_stages: bool = False
+
+    def __post_init__(self) -> None:
+        gppr = self.gpus_per_pod_per_replica
+        if gppr % self.tp != 0:
+            raise ValueError(
+                f"gpus_per_pod_per_replica={gppr} must be a multiple of tp="
+                f"{self.tp} so stages do not straddle pods")
+
+    @property
+    def gpus_per_replica(self) -> int:
+        return self.tp * self.pp
+
+    @property
+    def pods_per_replica(self) -> int:
+        return math.ceil(self.gpus_per_replica /
+                         self.gpus_per_pod_per_replica)
+
+    @property
+    def stages_per_pod(self) -> int:
+        return max(1, self.gpus_per_pod_per_replica // self.tp)
+
+    @property
+    def num_pods(self) -> int:
+        return self.pods_per_replica * self.dp
+
+    @property
+    def num_gpus(self) -> int:
+        return self.gpus_per_replica * self.dp
+
+    def stage_pod_offset(self, stage: int) -> int:
+        s = (self.pp - 1 - stage) if self.reverse_stages else stage
+        return min(s // self.stages_per_pod, self.pods_per_replica - 1)
+
+    def pod_of(self, replica: int, stage: int) -> int:
+        return replica * self.pods_per_replica + self.stage_pod_offset(stage)
+
+    def gpu_ids(self, replica: int, stage: int) -> tuple[int, ...]:
+        base = replica * self.gpus_per_replica + stage * self.tp
+        return tuple(range(base, base + self.tp))
+
+    def gpus_in_pod(self, pod: int) -> int:
+        count = 0
+        for r in range(self.dp):
+            for s in range(self.pp):
+                if self.pod_of(r, s) == pod:
+                    count += self.tp
+        return count
+
+    def port_limits(self) -> tuple[int, ...]:
+        """Default U_p = number of job GPUs in each pod (paper fairness rule)."""
+        return tuple(self.gpus_in_pod(p) for p in range(self.num_pods))
+
+    def cluster(self, nic_bandwidth: float, **kw) -> ClusterSpec:
+        return ClusterSpec(num_pods=self.num_pods,
+                           port_limits=self.port_limits(),
+                           nic_bandwidth=nic_bandwidth, **kw)
+
+    def reversed(self) -> "Placement":
+        return dataclasses.replace(self, reverse_stages=not self.reverse_stages)

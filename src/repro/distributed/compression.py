@@ -1,0 +1,103 @@
+"""Gradient compression: int8 ring all-reduce with error feedback.
+
+`ring_allreduce_int8` is a jax-native ring reduce-scatter + all-gather over
+`lax.ppermute` whose every hop carries int8 payloads -- 4x less wire
+traffic than bf16/fp32 all-reduce, which directly shrinks the DP volumes
+DELTA provisions circuits for.  All hops share one conservative global
+scale (pmax * n / 127) so partial sums never clip; the per-device
+quantization residual is returned for error feedback (re-injected into the
+next step's gradients, restoring convergence -- residual boundedness is
+asserted in tests).
+
+Run inside shard_map with the data axis bound, e.g.:
+
+    fn = jax.shard_map(lambda v: ring_allreduce_int8(v, "data")[0],
+                       mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ring_allreduce_int8(x: jax.Array, axis_name: str
+                        ) -> tuple[jax.Array, jax.Array]:
+    """All-reduce(sum) of a flat f32 vector with int8 ring hops.
+
+    Returns (sum, residual): `sum` is identical on every device up to int8
+    quantization; `residual` is this device's local quantization error
+    (x - dequant(quant(x))) for error feedback.
+    """
+    n = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    if n == 1:
+        return x, jnp.zeros_like(x)
+    size = x.shape[0]
+    pad = (-size) % n
+    xp = jnp.pad(x.astype(jnp.float32), (0, pad))
+    chunks = xp.reshape(n, -1)
+    # conservative shared scale: any partial sum of n int8 payloads fits
+    scale = jax.lax.pmax(jnp.max(jnp.abs(xp)), axis_name) * n / 127.0 \
+        + 1e-20
+    residual = xp - _dequantize(_quantize(xp, scale), scale)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: at step s rank r sends its partial sum of chunk
+    # (r - s) and accumulates the received chunk (r - s - 1); after n-1
+    # hops rank r owns the complete sum of chunk (r + 1) % n.
+    acc = chunks
+    for step in range(n - 1):
+        send_idx = (me - step) % n
+        recv_idx = (me - step - 1) % n
+        buf = _quantize(acc[send_idx], scale)
+        recv = jax.lax.ppermute(buf, axis_name, perm)
+        acc = acc.at[recv_idx].add(_dequantize(recv, scale))
+    own = (me + 1) % n
+    final_own = _dequantize(_quantize(acc[own], scale), scale)
+    out = jnp.zeros_like(chunks).at[own].set(final_own)
+
+    # all-gather the reduced chunks around the ring (int8 payloads)
+    buf = _quantize(acc[own], scale)
+    for step in range(n - 1):
+        recv = jax.lax.ppermute(buf, axis_name, perm)
+        idx = (me - step) % n
+        out = out.at[idx].set(_dequantize(recv, scale))
+        buf = recv
+    total = out.reshape(-1)[:size]
+    return total, residual.reshape(-1)[:size]
+
+
+def mean_grads_int8(grads: Any, axis_name: str, residual: Any | None = None
+                    ) -> tuple[Any, Any]:
+    """Tree-level DP gradient mean via the int8 ring, with error feedback.
+
+    Call inside shard_map/pmap with `axis_name` bound.  residual: pytree of
+    f32 like grads (or None on the first step).
+    """
+    n = jax.lax.axis_size(axis_name)
+
+    def one(g, r):
+        v = g.astype(jnp.float32).reshape(-1)
+        if r is not None:
+            v = v + r.reshape(-1)
+        total, res = ring_allreduce_int8(v, axis_name)
+        return (total / n).reshape(g.shape).astype(g.dtype), \
+            res.reshape(g.shape)
+
+    if residual is None:
+        residual = jax.tree.map(lambda g: None, grads)
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))

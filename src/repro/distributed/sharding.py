@@ -1,0 +1,191 @@
+"""PartitionSpec rules for every architecture on the production meshes.
+
+Meshes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+The pod axis extends data parallelism across pods (which is exactly the
+inter-pod DP traffic DELTA plans for).
+
+Assignment is divisibility-driven: each rule lists candidate tensor dims in
+priority order and takes the first one divisible by the axis-group size, so
+the same rules cover kv_heads=8 on a 16-way model axis (falls through to
+head_dim), 32 experts on 16 (expert-parallel), 8 experts on 16 (expert
+tensor-parallel on d_ff), batch=1 on long_500k (falls through to the KV
+sequence dim), etc.  FSDP (ZeRO-3-style data-axis parameter sharding) is
+enabled automatically for models above `FSDP_THRESHOLD` parameters.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+FSDP_THRESHOLD = 30e9
+
+MODEL_AXES = ("model",)
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _group_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def assign(shape: tuple[int, ...], mesh: Mesh,
+           rules: list[tuple[tuple[str, ...], list[int]]],
+           skip_dims: tuple[int, ...] = ()) -> P:
+    """First-divisible-dim assignment of axis groups to tensor dims."""
+    spec: list = [None] * len(shape)
+    for axes, dims in rules:
+        need = _group_size(mesh, axes)
+        if need <= 1:
+            continue
+        for d in dims:
+            if d >= len(shape) or d in skip_dims:
+                continue
+            if spec[d] is None and shape[d] % need == 0 and shape[d] >= need:
+                spec[d] = axes if len(axes) > 1 else axes[0]
+                break
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_spec(pathstr: str, shape: tuple[int, ...], mesh: Mesh,
+               fsdp: bool) -> P:
+    d_ax = data_axes(mesh)
+    m = MODEL_AXES
+    # leaves under groups/encoder carry a leading stack dim (scanned over)
+    off = 1 if ("groups" in pathstr or "encoder" in pathstr) else 0
+    skip = (0,) if off else ()
+
+    def R(*rules) -> P:
+        shifted = [(axes, [d + off for d in dims]) for axes, dims in rules]
+        return assign(shape, mesh, shifted, skip_dims=skip)
+
+    leaf = pathstr.rsplit("/", 1)[-1]
+    if len(shape) - off < 1 or leaf in ("step",):
+        return P()
+    if leaf in ("ln1", "ln2", "lnx", "final_ln", "norm_w", "conv_b",
+                "A_log", "dt_bias", "qn", "kn"):
+        return P()
+    if leaf == "embed":
+        return R((m, [0, 1]))
+    if leaf == "head":
+        return R((m, [1, 0]))
+    if leaf == "router":
+        return R((m, [1]))
+    if leaf == "wq":                               # (D, H, hd)
+        rules = [(m, [1, 2, 0])]
+        if fsdp:
+            rules.append((d_ax, [0]))
+        return R(*rules)
+    if leaf in ("wk", "wv"):                       # (D, KV, hd)
+        # shard KV heads when divisible, otherwise REPLICATE: head_dim
+        # sharding turns every attention einsum into an all-reduce of the
+        # (Sq x Sk) scores (GQA KV tensors are small; expanded at use)
+        rules = [(m, [1])]
+        if fsdp:
+            rules.append((d_ax, [0]))
+        return R(*rules)
+    if leaf in ("bq", "bk", "bv"):                 # (H, hd)
+        return R((m, [0, 1]))
+    if leaf == "wo" and "attn" in pathstr:         # (H, hd, D)
+        rules = [(m, [0, 1])]
+        if fsdp:
+            rules.append((d_ax, [2]))
+        return R(*rules)
+    if leaf in ("wi", "wg") and "moe" in pathstr:  # (E, D, F)
+        rules = [(m, [0, 2, 1])]
+        if fsdp:
+            rules.append((d_ax, [1]))
+        return R(*rules)
+    if leaf == "wo" and "moe" in pathstr:          # (E, F, D)
+        rules = [(m, [0, 1])]
+        if fsdp:
+            rules.append((d_ax, [2]))
+        return R(*rules)
+    if leaf in ("wi", "wg"):                       # (D, F)
+        rules = [(m, [1])]
+        if fsdp:
+            rules.append((d_ax, [0]))
+        return R(*rules)
+    if leaf == "wo":                               # (F, D)
+        rules = [(m, [0])]
+        if fsdp:
+            rules.append((d_ax, [1]))
+        return R(*rules)
+    if leaf == "in_proj":                          # (D, Z)
+        rules = [(m, [1])]
+        if fsdp:
+            rules.append((d_ax, [0]))
+        return R(*rules)
+    if leaf == "out_proj":                         # (d_in, D)
+        rules = [(m, [0])]
+        if fsdp:
+            rules.append((d_ax, [1]))
+        return R(*rules)
+    if leaf == "conv_w":                           # (K, C)
+        return R((m, [1]))
+    # fallback: model-shard the last divisible dim
+    n = len(shape)
+    return R((m, list(range(n - off - 1, -1, -1))))
+
+
+def cache_spec(pathstr: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    d_ax = data_axes(mesh)
+    m = MODEL_AXES
+    leaf = pathstr.rsplit("/", 1)[-1]
+    if leaf in ("pos",) or len(shape) == 0:
+        return P()
+    if leaf in ("k", "v"):       # (G, B, S, KV, hd)
+        return assign(shape, mesh, [(d_ax, [1, 2]), (m, [3, 4])],
+                      skip_dims=(0,))
+    if leaf == "conv":           # (G, B, W, C)
+        return assign(shape, mesh, [(d_ax, [1]), (m, [3])], skip_dims=(0,))
+    if leaf == "ssm":            # (G, B, nh, hd, n)
+        return assign(shape, mesh, [(d_ax, [1]), (m, [2, 3])],
+                      skip_dims=(0,))
+    if leaf == "enc":            # (B, T, D)
+        return assign(shape, mesh, [(d_ax, [0])])
+    return P()
+
+
+def batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    return assign(shape, mesh, [(data_axes(mesh), [0])])
+
+
+def tree_specs(tree: Any, mesh: Mesh, kind: str,
+               cfg: ModelConfig | None = None,
+               fsdp: bool | None = None) -> Any:
+    """kind: params | state | cache | batch."""
+    if fsdp is None:
+        fsdp = bool(cfg and cfg.total_params() > FSDP_THRESHOLD)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        pathstr = _path_str(path)
+        if kind in ("params", "state"):
+            return param_spec(pathstr, shape, mesh, fsdp)
+        if kind == "cache":
+            return cache_spec(pathstr, shape, mesh)
+        return batch_spec(shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def named(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,91 @@
+"""Jitted public wrappers for repro.kernels.
+
+Backend selection: the Pallas kernels target TPU; on CPU the pure-jnp
+oracles from ref.py are used (Pallas interpret mode is a correctness tool,
+not a performance path).  Pass backend='pallas' to force the kernels
+(tests do this with interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import maxplus as _maxplus_k
+from repro.kernels import ref as _ref
+from repro.kernels import tclosure as _tclosure_k
+from repro.kernels import waterfill as _waterfill_k
+
+NEG_INF = _ref.NEG_INF
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick(backend: str | None) -> str:
+    if backend in ("pallas", "ref"):
+        return backend
+    return "pallas" if _on_tpu() else "ref"
+
+
+def tclosure_step(a, *, backend: str | None = None,
+                  interpret: bool | None = None):
+    if _pick(backend) == "pallas":
+        return _tclosure_k.tclosure_step(
+            a, interpret=bool(interpret if interpret is not None
+                              else not _on_tpu()))
+    return _ref.tclosure_step_ref(jnp.asarray(a))
+
+
+def transitive_closure(a, *, backend: str | None = None,
+                       interpret: bool | None = None):
+    """Full boolean transitive closure by repeated squaring (host loop with
+    early fixed-point exit -- this is offline planning code)."""
+    a = jnp.asarray(a).astype(jnp.bool_)
+    n = a.shape[0]
+    for _ in range(max(1, math.ceil(math.log2(max(n, 2))))):
+        nxt = tclosure_step(a, backend=backend, interpret=interpret)
+        if bool((nxt == a).all()):
+            return nxt
+        a = nxt
+    return a
+
+
+def maxplus(a, b, *, backend: str | None = None,
+            interpret: bool | None = None):
+    if _pick(backend) == "pallas":
+        return _maxplus_k.maxplus(
+            a, b, interpret=bool(interpret if interpret is not None
+                                 else not _on_tpu()))
+    return _ref.maxplus_ref(jnp.asarray(a), jnp.asarray(b))
+
+
+def longest_paths(adj, *, backend: str | None = None,
+                  interpret: bool | None = None):
+    """All-pairs longest path of a weighted DAG adjacency matrix.
+
+    adj[i, j] = edge weight, NEG_INF when no edge.  Diagonal is forced to 0
+    (empty path).  Repeated max-plus squaring, host loop with fixed point.
+    """
+    a = jnp.asarray(adj).astype(jnp.float32)
+    n = a.shape[0]
+    eye = jnp.where(jnp.eye(n, dtype=bool), 0.0, NEG_INF)
+    d = jnp.maximum(a, eye)
+    for _ in range(max(1, math.ceil(math.log2(max(n, 2))))):
+        nxt = maxplus(d, d, backend=backend, interpret=interpret)
+        nxt = jnp.maximum(nxt, NEG_INF)
+        if bool(jnp.allclose(nxt, d)):
+            return nxt
+        d = nxt
+    return d
+
+
+def fill_matvec(w, rhs, *, backend: str | None = None,
+                interpret: bool | None = None):
+    if _pick(backend) == "pallas":
+        return _waterfill_k.fill_matvec(
+            w, rhs, interpret=bool(interpret if interpret is not None
+                                   else not _on_tpu()))
+    return _ref.fill_matvec_ref(jnp.asarray(w), jnp.asarray(rhs))

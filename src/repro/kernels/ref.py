@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in repro.kernels.
+
+These define the semantics; the Pallas kernels must match them bit-for-bit
+(boolean ops) or to float tolerance (max-plus / matvec) across the shape and
+dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite stand-in for -inf in max-plus (keeps f32 MXU-safe)
+
+
+def tclosure_step_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """One squaring step of boolean transitive closure: A | (A @ A > 0)."""
+    a = a.astype(jnp.bool_)
+    f = a.astype(jnp.float32)
+    return a | (f @ f > 0.5)
+
+
+def transitive_closure_ref(a: jnp.ndarray, max_steps: int | None = None
+                           ) -> jnp.ndarray:
+    """Full closure by repeated squaring (host loop; offline planning code)."""
+    import math
+    a = a.astype(jnp.bool_)
+    n = a.shape[0]
+    steps = max_steps if max_steps is not None else max(
+        1, math.ceil(math.log2(max(n, 2))))
+    for _ in range(steps):
+        nxt = tclosure_step_ref(a)
+        if bool((nxt == a).all()):
+            return nxt
+        a = nxt
+    return a
+
+
+def maxplus_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Tropical (max, +) matrix product: out[i,j] = max_k a[i,k] + b[k,j].
+
+    Entries <= NEG_INF are treated as 'no edge'.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    out = jnp.max(a[:, :, None] + b[None, :, :], axis=1)
+    return jnp.maximum(out, NEG_INF)
+
+
+def fill_matvec_ref(w: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """Fused water-filling matvec pair: one pass over the incidence matrix.
+
+    w:   (C, N) constraint-task incidence weights
+    rhs: (N, R) stacked right-hand sides (R=2: [phi*active, unfrozen_w])
+    returns (C, R) = w @ rhs in float32.
+    """
+    return w.astype(jnp.float32) @ rhs.astype(jnp.float32)

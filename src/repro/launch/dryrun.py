@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell with ShapeDtypeStruct inputs (no allocation) and record the roofline
+raw material: memory_analysis(), cost_analysis() and per-kind collective
+bytes parsed from the compiled (post-SPMD, per-device) HLO.
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count at first initialization.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape train_4k --mesh single --quick
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (REGISTRY, SHAPES, ArchSpec, ModelConfig,  # noqa: E402
+                           ShapeSpec, shape_applicable)
+from repro.distributed import sharding as shd                        # noqa: E402
+from repro.launch import hloanalysis                                 # noqa: E402
+from repro.launch.mesh import make_production_mesh                   # noqa: E402
+from repro.models import model as M                                  # noqa: E402
+from repro.training import optimizer as opt                          # noqa: E402
+from repro.training import train_step as ts                          # noqa: E402
+
+BIG_PARAMS = 100e9          # >=: bf16 optimizer moments (see DESIGN.md)
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+
+def _xkv_len(cfg: ModelConfig) -> int:
+    if cfg.encoder_layers:
+        return cfg.enc_tokens
+    if cfg.cross_attn_every:
+        return cfg.num_image_tokens
+    return 0
+
+
+def input_specs(arch: ArchSpec, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = arch.config
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    xl = _xkv_len(cfg)
+    if shape.kind == "train":
+        specs = {"tokens": f((B, S), jnp.int32),
+                 "labels": f((B, S), jnp.int32)}
+        if xl:
+            specs["xkv"] = f((B, xl, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": f((B, S), jnp.int32)}
+        if xl:
+            specs["xkv"] = f((B, xl, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a KV cache of length seq_len
+    return {"tokens": f((B, 1), jnp.int32)}
+
+
+def _state_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.total_params() >= BIG_PARAMS else jnp.float32
+
+
+def _abstract_state(cfg: ModelConfig):
+    ocfg = opt.AdamWConfig(state_dtype=_state_dtype(cfg))
+    key = jax.random.PRNGKey(0)
+    state = jax.eval_shape(
+        lambda: ts.init_train_state(cfg, ocfg, key, dtype=jnp.bfloat16))
+    return state, ocfg
+
+
+def _abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, key, dtype=jnp.bfloat16))
+
+
+def _abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, max_len, dtype=jnp.bfloat16,
+                             enc_len=_xkv_len(cfg)))
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum per-device result bytes of every collective op in the HLO."""
+    out = {k: 0.0 for k in COLLECTIVES}
+    out["count"] = 0
+    shape_re = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        for kind in COLLECTIVES:
+            if f" {kind}(" not in line and f" {kind}-start(" not in line:
+                continue
+            lhs = line.split("=", 1)
+            if len(lhs) != 2:
+                continue
+            # result type(s): everything between '=' and the op name
+            rhs = lhs[1]
+            cut = rhs.find(kind)
+            for m in shape_re.finditer(rhs[:cut]):
+                dt, dims = m.group(1), m.group(2)
+                size = _DTYPE_BYTES.get(dt)
+                if size is None:
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+                out[kind] += n * size
+            out["count"] += 1
+            break
+    return out
+
+
+def run_cell(arch_name: str, arch: ArchSpec, shape: ShapeSpec,
+             mesh, mesh_name: str, accum_steps: int = 0) -> dict:
+    cfg = arch.config
+    t0 = time.time()
+    cell = {"arch": arch_name, "shape": shape.name, "mesh": mesh_name,
+            "kind": shape.kind}
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return cell
+
+    specs = input_specs(arch, shape)
+    has_xkv = "xkv" in specs
+    batch_sh = shd.named(
+        jax.tree.map(lambda s: shd.batch_spec(s.shape, mesh), specs), mesh)
+
+    if shape.kind == "train":
+        state, ocfg = _abstract_state(cfg)
+        state_specs = shd.tree_specs(state, mesh, "state", cfg=cfg)
+        state_sh = shd.named(state_specs, mesh)
+        if accum_steps == 0:  # auto microbatching: 1 seq/device for the
+            # huge archs (activation pressure), 2 otherwise
+            dsz = 1
+            for a in shd.data_axes(mesh):
+                dsz *= mesh.shape[a]
+            target = 1 if cfg.total_params() >= BIG_PARAMS else 2
+            accum_steps = max(1, shape.global_batch // (dsz * target))
+        cell["accum_steps"] = accum_steps
+        step_fn = ts.make_train_step(cfg, ocfg, accum_steps=accum_steps,
+                                     remat=True, has_xkv=has_xkv,
+                                     mesh=mesh,
+                                     data_axes=shd.data_axes(mesh))
+        jfn = jax.jit(step_fn,
+                      in_shardings=(state_sh, batch_sh),
+                      out_shardings=(state_sh, None),
+                      donate_argnums=(0,))
+        args = (state, specs)
+    else:
+        params = _abstract_params(cfg)
+        param_sh = shd.named(shd.tree_specs(params, mesh, "params",
+                                            cfg=cfg), mesh)
+        cache = _abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cache_sh = shd.named(shd.tree_specs(cache, mesh, "cache"), mesh)
+        if shape.kind == "prefill":
+            fn = ts.make_prefill_step(cfg, has_xkv=has_xkv)
+            jfn = jax.jit(
+                fn, in_shardings=(param_sh, cache_sh,
+                                  batch_sh["tokens"]) +
+                ((batch_sh["xkv"],) if has_xkv else ()),
+                donate_argnums=(1,))
+            args = (params, cache, specs["tokens"]) + \
+                ((specs["xkv"],) if has_xkv else ())
+        else:
+            fn = ts.make_decode_step(cfg)
+            jfn = jax.jit(fn,
+                          in_shardings=(param_sh, cache_sh,
+                                        batch_sh["tokens"]),
+                          donate_argnums=(1,))
+            args = (params, cache, specs["tokens"])
+
+    # sharding hints: always pin activations to batch sharding at layer
+    # boundaries; additionally sequence-shard attention (Ulysses-style)
+    # for archs whose head count does not divide the model axis
+    from repro.models.layers import sharding_hints
+    msize = mesh.shape["model"]
+    seq_shard = bool(cfg.heads % msize) and shape.kind != "decode"
+    # sequence-parallel layer boundaries: measured win for large non-SSM
+    # archs (grok: memory term halved); regression for SSM/hybrid (the
+    # chunked SSD scan fights the seq resharding) and for small dense
+    # archs (collective term tripled on yi-6b) -- see EXPERIMENTS.md §Perf
+    seq_parallel = shape.kind == "train" and (
+        (cfg.family in ("dense", "moe")
+         and cfg.total_params() >= BIG_PARAMS)
+        or seq_shard)   # pairs well with Ulysses attention (qwen2.5)
+    hints = sharding_hints(mesh, shd.data_axes(mesh), seq_shard=seq_shard,
+                           seq_parallel=seq_parallel)
+    cell["seq_shard_attention"] = seq_shard
+    cell["seq_parallel"] = seq_parallel
+    try:
+        with hints:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    except Exception as exc:   # noqa: BLE001
+        cell.update(status="error", error=f"{type(exc).__name__}: {exc}",
+                    trace=traceback.format_exc()[-2000:])
+        return cell
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    cost = hloanalysis.analyze(txt)   # trip-count-aware per-device totals
+    cell.update(
+        status="ok",
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                ma, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+        },
+        flops_per_device=cost.flops,
+        bytes_per_device=cost.bytes,
+        collectives={**cost.collective_bytes,
+                     "count": cost.collective_count,
+                     "total": cost.total_collective_bytes},
+        xla_raw={"flops": ca.get("flops"),
+                 "bytes_accessed": ca.get("bytes accessed"),
+                 "transcendentals": ca.get("transcendentals")},
+        hlo_bytes=len(txt),
+        params_total=cfg.total_params(),
+        params_active=cfg.total_active_params(),
+        tokens=(specs["tokens"].shape[0] * specs["tokens"].shape[1]),
+        devices=int(mesh.size),
+    )
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--accum-steps", type=int, default=0,
+                    help="0 = auto (~2 sequences/device/microstep)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke: reduced configs, small shapes")
+    args = ap.parse_args()
+
+    archs = list(REGISTRY) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "multi_pod_2x16x16" if multi else "single_pod_16x16"
+        for a in archs:
+            arch = REGISTRY[a]
+            if args.quick:
+                import dataclasses
+                arch = dataclasses.replace(arch,
+                                           config=arch.config.reduced())
+            for s in shapes:
+                shape = SHAPES[s]
+                if args.quick:
+                    import dataclasses
+                    shape = dataclasses.replace(
+                        shape, seq_len=min(shape.seq_len, 256),
+                        global_batch=min(shape.global_batch, 32))
+                fname = os.path.join(args.out,
+                                     f"{mesh_name}__{a}__{s}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[skip existing] {fname}")
+                    continue
+                t0 = time.time()
+                cell = run_cell(a, arch, shape, mesh, mesh_name,
+                                accum_steps=args.accum_steps)
+                cell["wall_s"] = round(time.time() - t0, 2)
+                with open(fname, "w") as f:
+                    json.dump(cell, f, indent=1)
+                stat = cell["status"]
+                extra = ""
+                if stat == "ok":
+                    mem = cell["memory"]
+                    per_dev = (mem["argument_bytes"] or 0) / mesh.size
+                    extra = (f" args={per_dev/2**30:.2f}GiB/dev "
+                             f"flops/dev={cell['flops_per_device']:.3g} "
+                             f"coll={cell['collectives']['count']}")
+                elif stat == "error":
+                    extra = " " + cell["error"][:120]
+                elif stat == "skipped":
+                    extra = " " + cell["reason"]
+                print(f"[{stat:7s}] {mesh_name} {a} {s} "
+                      f"({cell['wall_s']}s){extra}", flush=True)
+                results.append(cell)
+    bad = [c for c in results if c["status"] == "error"]
+    print(f"\n{len(results)} cells: "
+          f"{sum(c['status'] == 'ok' for c in results)} ok, "
+          f"{sum(c['status'] == 'skipped' for c in results)} skipped, "
+          f"{len(bad)} errors")
+    if bad:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

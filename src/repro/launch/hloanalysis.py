@@ -1,0 +1,255 @@
+"""Computation-aware cost analysis of compiled (post-SPMD) HLO text.
+
+`compiled.cost_analysis()` counts every while-loop body exactly once, which
+under-counts scanned layer stacks by the trip count (verified empirically:
+a 7-trip scan reports 1x body flops).  This module re-derives per-device
+totals by parsing the HLO text into computations and multiplying the cost
+of every while body by its statically known trip count (jax scans lower to
+`iv < constant` loops starting at 0, so the constant in the condition
+computation is the trip count).
+
+Accounting model per computation:
+  flops  -- 2 * prod(result dims) * prod(contracting dims) per `dot`
+            (+ recursion into fusion called computations, nested whiles
+            multiplied by their trips).  Elementwise flops are ignored --
+            matmuls dominate LM workloads; the XLA raw number is kept
+            alongside for reference.
+  bytes  -- sum over top-level op lines of (result + operand) bytes,
+            treating fusions as single reads of their params and writes of
+            their root (a post-fusion HBM traffic model); control ops
+            (tuple plumbing, parameters, constants) are skipped.
+  coll   -- per-kind collective result bytes (all-gather / all-reduce /
+            reduce-scatter / all-to-all / collective-permute), multiplied
+            through loop trips like everything else.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+               "f8e4m3fn": 1, "f8e5m2": 1,
+               "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+_CONTROL_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "partition-id", "replica-id"}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        sz = DTYPE_BYTES.get(dt)
+        if sz is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * sz
+    return total
+
+
+@dataclass
+class _Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class _Comp:
+    name: str
+    is_entry: bool
+    ops: list[_Op] = field(default_factory=list)
+    shapes: dict[str, str] = field(default_factory=dict)
+
+
+def _parse_operands(rest: str) -> tuple[list[str], str]:
+    """Operand names inside the first balanced paren group of `rest`."""
+    depth = 1
+    out = []
+    i = 0
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = rest[:i]
+    out = re.findall(r"%([\w.\-]+)", args)
+    return out, rest[i + 1:]
+
+
+def parse_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = _Comp(name=m.group(2), is_entry=bool(m.group(1)))
+                # register header-declared parameter shapes (real as_text
+                # repeats them as op lines, but be robust either way)
+                for pm in re.finditer(r"(\w[\w.\-]*):\s*([a-z0-9]+\[[0-9,]*\])",
+                                      line):
+                    cur.shapes.setdefault(pm.group(1), pm.group(2))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OPLINE_RE.match(line)
+        if not m:
+            continue
+        name, rtype, opcode, rest = m.groups()
+        operands, tail = _parse_operands(rest)
+        op = _Op(name=name, result_type=rtype, opcode=opcode,
+                 rest=rest, operands=operands)
+        op.tail = tail  # type: ignore[attr-defined]
+        cur.ops.append(op)
+        cur.shapes[name] = rtype
+    return comps
+
+
+def _dot_flops(op: _Op, shapes: dict[str, str]) -> float:
+    result_elems = 0
+    for m in _SHAPE_RE.finditer(op.result_type):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        result_elems += n
+    lhs = op.operands[0] if op.operands else None
+    contract = 1
+    mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest + getattr(
+        op, "tail", ""))
+    if mm and lhs and lhs in shapes:
+        lshape = _SHAPE_RE.search(shapes[lhs])
+        if lshape:
+            dims = [int(d) for d in lshape.group(2).split(",") if d]
+            for idx in mm.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * result_elems * contract
+
+
+def _cond_trip_count(comps: dict[str, _Comp], cond_name: str) -> int:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    consts = []
+    for op in comp.ops:
+        if op.opcode == "constant":
+            mm = re.search(r"constant\((\-?\d+)\)", "constant(" + op.rest)
+            if mm:
+                consts.append(int(mm.group(1)))
+        mm = re.search(r"constant\((\-?\d+)\)", op.rest)
+        if mm:
+            consts.append(int(mm.group(1)))
+    pos = [c for c in consts if c > 0]
+    return max(pos) if pos else 1
+
+
+@dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=lambda: {
+        k: 0.0 for k in COLLECTIVES})
+    collective_count: float = 0.0
+
+    def scaled(self, k: float) -> "HLOCost":
+        return HLOCost(self.flops * k, self.bytes * k,
+                       {kk: v * k for kk, v in self.collective_bytes.items()},
+                       self.collective_count * k)
+
+    def add(self, other: "HLOCost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v
+        self.collective_count += other.collective_count
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _analyze_comp(comps: dict[str, _Comp], name: str,
+                  memo: dict[str, HLOCost], stack: set[str]) -> HLOCost:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    cost = HLOCost()
+    if comp is None or name in stack:
+        return cost
+    stack = stack | {name}
+    for op in comp.ops:
+        full = op.rest + getattr(op, "tail", "")
+        if op.opcode == "dot":
+            cost.flops += _dot_flops(op, comp.shapes)
+            cost.bytes += _shape_bytes(op.result_type)
+            for o in op.operands:
+                cost.bytes += _shape_bytes(comp.shapes.get(o, ""))
+        elif op.opcode == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", full)
+            mc = re.search(r"condition=%?([\w.\-]+)", full)
+            trips = _cond_trip_count(comps, mc.group(1)) if mc else 1
+            if mb:
+                body = _analyze_comp(comps, mb.group(1), memo, stack)
+                cost.add(body.scaled(trips))
+        elif op.opcode == "fusion":
+            mcall = re.search(r"calls=%?([\w.\-]+)", full)
+            if mcall:
+                inner = _analyze_comp(comps, mcall.group(1), memo, stack)
+                # flops/collectives from inside; bytes = fusion boundary
+                cost.flops += inner.flops
+                for k, v in inner.collective_bytes.items():
+                    cost.collective_bytes[k] += v
+                cost.collective_count += inner.collective_count
+            cost.bytes += _shape_bytes(op.result_type)
+            for o in op.operands:
+                cost.bytes += _shape_bytes(comp.shapes.get(o, ""))
+        elif op.opcode in ("call", "conditional", "async-start"):
+            for mcall in re.finditer(
+                    r"(?:to_apply|calls|branch_computations=\{?)=?%?"
+                    r"([\w.\-]+)", full):
+                inner = _analyze_comp(comps, mcall.group(1), memo, stack)
+                cost.add(inner)
+        else:
+            base = op.opcode.replace("-start", "")
+            if base in COLLECTIVES:
+                cost.collective_bytes[base] += _shape_bytes(op.result_type)
+                cost.collective_count += 1
+                cost.bytes += _shape_bytes(op.result_type)
+            elif op.opcode.endswith("-done"):
+                pass
+            elif op.opcode not in _CONTROL_OPS:
+                cost.bytes += _shape_bytes(op.result_type)
+                for o in op.operands:
+                    cost.bytes += _shape_bytes(comp.shapes.get(o, ""))
+    memo[name] = cost
+    return cost
+
+
+def analyze(text: str) -> HLOCost:
+    """Per-device cost of a compiled HLO module (trip-count aware)."""
+    comps = parse_computations(text)
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:   # pragma: no cover - defensive
+        return HLOCost()
+    memo: dict[str, HLOCost] = {}
+    # fusion-called computations must not double count: analyze from entry
+    return _analyze_comp(comps, entry, memo, set())

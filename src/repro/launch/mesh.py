@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any import;
+everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Best-effort mesh over whatever devices exist (examples / tests)."""
+    n = jax.device_count()
+    mp = max(1, min(model_parallel, n))
+    dp = n // mp
+    return jax.make_mesh(
+        (dp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

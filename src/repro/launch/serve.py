@@ -1,0 +1,84 @@
+"""Batched decode serving driver (prefill + autoregressive loop).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduce \
+        --batch 4 --prompt-len 64 --decode-steps 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.training import train_step as ts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = REGISTRY[args.arch].config
+    if args.reduce:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(args.model_parallel)
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key, dtype=jnp.float32)
+    params = jax.device_put(
+        params, shd.named(shd.tree_specs(params, mesh, "params", cfg=cfg),
+                          mesh))
+    max_len = args.prompt_len + args.decode_steps
+    xl = cfg.enc_tokens if cfg.encoder_layers else cfg.num_image_tokens
+    cache = M.init_cache(cfg, args.batch, max_len, dtype=jnp.float32,
+                         enc_len=xl)
+    cache = jax.device_put(
+        cache, shd.named(shd.tree_specs(cache, mesh, "cache"), mesh))
+
+    has_xkv = bool(xl)
+    prefill = jax.jit(ts.make_prefill_step(cfg, has_xkv=has_xkv),
+                      donate_argnums=(1,))
+    decode = jax.jit(ts.make_decode_step(cfg), donate_argnums=(1,))
+
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab)
+    xkv = (jax.random.normal(key, (args.batch, xl, cfg.d_model),
+                             jnp.float32) if has_xkv else None)
+    t0 = time.time()
+    if has_xkv:
+        logits, cache = prefill(params, cache, prompt, xkv)
+    else:
+        logits, cache = prefill(params, cache, prompt)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    tok = jnp.argmax(logits[:, -1], axis=-1, keepdims=True).astype(jnp.int32)
+
+    t0 = time.time()
+    out = [tok]
+    for _ in range(args.decode_steps):
+        tok, logits, cache = decode(params, cache, tok)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    total_tok = args.batch * args.decode_steps
+    print(f"[serve] {cfg.name}: prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill*1e3:.0f}ms; decoded {total_tok} tokens in "
+          f"{t_decode*1e3:.0f}ms "
+          f"({total_tok/max(t_decode,1e-9):.1f} tok/s)")
+    seq = jnp.concatenate(out, axis=1)
+    assert bool(jnp.isfinite(logits).all()), "non-finite logits"
+    print("[serve] sample token ids:", seq[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

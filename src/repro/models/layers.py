@@ -1,0 +1,525 @@
+"""Model-zoo primitives: RMSNorm, RoPE, GQA flash attention, SwiGLU,
+sort-based MoE dispatch, Mamba-2 SSD (chunked scan + recurrent step).
+
+Everything is a pure function over explicit parameter pytrees so the same
+code lowers under pjit for the dry-run meshes and runs eagerly for the CPU
+smoke tests.  Softmax/normalization statistics accumulate in float32.
+
+`attention_hints` installs an optional Ulysses-style sequence-sharding
+constraint for architectures whose head count does not divide the model
+axis (qwen2.5: 40 heads, whisper: 20 heads on a 16-way axis): q/k/v are
+constrained to sequence sharding before the score einsums (GSPMD inserts
+cheap all-to-alls) so the scores stay device-local instead of being
+all-reduced.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = dict[str, Any]
+
+_ATTN_HINTS: contextvars.ContextVar[dict | None] = \
+    contextvars.ContextVar("attn_hints", default=None)
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh, data_axes: tuple[str, ...],
+                   model_axes: tuple[str, ...] = ("model",),
+                   seq_shard: bool = False, seq_parallel: bool = False):
+    """Install sharding hints for tracing.
+
+    batch pinning (always): activations keep the batch dim on the data axes
+    at layer/MoE boundaries.
+    seq_shard: Ulysses-style q/k/v sequence sharding inside attention (for
+    head counts that do not divide the model axis).
+    seq_parallel: Megatron-SP-style sequence sharding of the *layer
+    boundary* activations over the model axis -- shrinks the remat carry
+    stack by the model-axis size.
+    """
+    token = _ATTN_HINTS.set({"mesh": mesh, "data": data_axes,
+                             "model": model_axes, "seq_shard": seq_shard,
+                             "seq_parallel": seq_parallel})
+    try:
+        yield
+    finally:
+        _ATTN_HINTS.reset(token)
+
+
+# backwards-compatible alias
+attention_hints = sharding_hints
+
+
+def constrain_batch(x: jax.Array, boundary: bool = False) -> jax.Array:
+    """Pin (B, ...) activations to batch sharding over the data axes.
+
+    Without this, GSPMD may resolve FSDP weight contractions by
+    *replicating* the batch and all-reducing partial sums -- observed on
+    jamba/grok as full-microbatch f32 activations per device (16x memory)
+    and hundreds of GB of score all-reduces.
+
+    boundary=True additionally sequence-shards dim 1 over the model axes
+    when seq_parallel is enabled (layer-boundary activations only).
+    """
+    hints = _ATTN_HINTS.get()
+    if hints is None or x.ndim < 2:
+        return x
+    mesh = hints["mesh"]
+    data = hints["data"]
+    dsize = 1
+    for a in data:
+        dsize *= mesh.shape[a]
+    if dsize <= 1 or x.shape[0] % dsize:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rest: list = [None] * (x.ndim - 1)
+    if boundary and hints.get("seq_parallel") and x.ndim >= 3:
+        model = hints["model"]
+        msize = 1
+        for a in model:
+            msize *= mesh.shape[a]
+        if msize > 1 and x.shape[1] % msize == 0 and x.shape[1] >= msize:
+            rest[0] = model if len(model) > 1 else model[0]
+    spec = P(data if len(data) > 1 else data[0], *rest)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _seq_shard(x: jax.Array) -> jax.Array:
+    """Constrain (B, S, heads, hd) to (data, model, None, None)."""
+    hints = _ATTN_HINTS.get()
+    if hints is None or not hints["seq_shard"] or x.ndim != 4:
+        return x
+    mesh = hints["mesh"]
+    model = hints["model"]
+    msize = 1
+    for a in model:
+        msize *= mesh.shape[a]
+    if x.shape[1] % msize or x.shape[1] < msize:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = P(hints["data"], model if len(model) > 1 else model[0],
+             None, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+DENSE_ATTN_MAX_KV = 8192   # use dense masked attention up to this KV length
+
+
+def _expand_kv(k: jax.Array, heads: int) -> jax.Array:
+    """Repeat KV heads up to `heads` (GQA).
+
+    The expanded form keeps every attention einsum free of the
+    (B,S,KV,G,hd) reshape, which GSPMD cannot re-shard when the flat head
+    dim is model-sharded but neither KV nor G alone is divisible
+    (observed: involuntary full rematerialization + per-layer score
+    all-reduces).  Under sharding the repeat materializes only the local
+    head shard.
+    """
+    KV = k.shape[2]
+    if KV == heads:
+        return k
+    return jnp.repeat(k, heads // KV, axis=2)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool, q_offset=0) -> jax.Array:
+    """Masked-softmax attention (training path).
+
+    Differentiable with O(S^2) transient only -- under the per-group remat
+    policy one layer's score matrix lives at a time.  The flash variant is
+    used for prefill/long-KV paths, which are forward-only (a scan-based
+    flash kernel would otherwise stash its per-chunk probabilities as
+    autodiff residuals and negate the memory saving).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    q = _seq_shard(q)
+    ke = _seq_shard(_expand_kv(k, H))
+    ve = _seq_shard(_expand_kv(v, H))
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, ke,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        mask = jnp.arange(Sk)[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, ve)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool, q_offset: int = 0,
+                    kv_block: int = 1024) -> jax.Array:
+    """Streaming-softmax attention with GQA.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).  Scans KV blocks so the
+    (Sq x Sk) score matrix never materializes (32k prefill stays in VMEM-
+    friendly tiles).  f32 running max/sum.  KV heads are expanded to H
+    (see _expand_kv) so the einsums have no sharded contractions.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    q = _seq_shard(q)
+    scale = 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32) * scale
+    nblk = -(-Sk // kv_block)
+    pad = nblk * kv_block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, kv_block, KV, hd)
+    vb = v.reshape(B, nblk, kv_block, KV, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, start = blk
+        kc = _expand_kv(kc, H)        # per-chunk expansion keeps kv small
+        vc = _expand_kv(vc, H)
+        s = jnp.einsum("bqhd,bchd->bhqc", qf, kc.astype(jnp.float32))
+        kv_pos = start + jnp.arange(kv_block)
+        mask = kv_pos[None, :] < Sk
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None, :, :], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    starts = jnp.arange(nblk) * kv_block
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array) -> jax.Array:
+    """Single-step attention against a (possibly padded) KV cache.
+
+    q: (B, 1, H, hd); k, v: (B, Smax, KV, hd); kv_len: valid prefix length.
+    """
+    B, _, H, hd = q.shape
+    ke = _expand_kv(k, H)
+    ve = _expand_kv(v, H)
+    scale = 1.0 / math.sqrt(hd)
+    qf = q[:, 0].astype(jnp.float32) * scale          # (B, H, hd)
+    s = jnp.einsum("bhd,bshd->bhs", qf, ke.astype(jnp.float32))
+    mask = jnp.arange(k.shape[1])[None, :] < kv_len
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, ve.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)
+
+
+# ----------------------------------------------------------- attn wrapper
+def init_attention(key, cfg: ModelConfig, cross: bool = False,
+                   dtype=jnp.bfloat16) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    p: Params = {
+        "wq": jax.random.normal(k1, (d, cfg.heads, hd), dtype) * std,
+        "wk": jax.random.normal(k2, (d, cfg.kv_heads, hd), dtype) * std,
+        "wv": jax.random.normal(k3, (d, cfg.kv_heads, hd), dtype) * std,
+        "wo": jax.random.normal(k4, (cfg.heads, hd, d), dtype) * std,
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_heads, hd), dtype)
+    if cfg.qk_norm and not cross:
+        p["qn"] = jnp.ones((hd,), dtype)
+        p["kn"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, causal: bool = True,
+                    cache: Params | None = None,
+                    kv_source: jax.Array | None = None,
+                    use_rope: bool = True):
+    """Self- or cross-attention.  Returns (out, new_cache)."""
+    src = kv_source if kv_source is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "qn" in p:
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    if use_rope and kv_source is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None and kv_source is None:
+        # write this call's K/V at position kv_len
+        idx = cache["len"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, 1)
+        new_cache = {"k": ck, "v": cv, "len": idx + x.shape[1]}
+        if x.shape[1] == 1:
+            out = decode_attention(q, ck, cv, idx + x.shape[1])
+        else:
+            # prefill: attend within this call's K/V (cache starts empty)
+            out = flash_attention(q, k, v, causal=causal, q_offset=idx)
+    elif k.shape[1] <= DENSE_ATTN_MAX_KV:
+        out = dense_attention(q, k, v, causal=causal and kv_source is None)
+    else:
+        out = flash_attention(q, k, v, causal=causal and kv_source is None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ------------------------------------------------------------------ mlps
+def init_mlp(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 1.0 / math.sqrt(d)
+    return {"wi": jax.random.normal(k1, (d, f), dtype) * std,
+            "wg": jax.random.normal(k2, (d, f), dtype) * std,
+            "wo": jax.random.normal(k3, (f, d), dtype) * std}
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d)
+    return {"router": jax.random.normal(k0, (d, e), jnp.float32) * std,
+            "wi": jax.random.normal(k1, (e, d, f), dtype) * std,
+            "wg": jax.random.normal(k2, (e, d, f), dtype) * std,
+            "wo": jax.random.normal(k3, (e, f, d), dtype) * std}
+
+
+def moe_block(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Top-k MoE with *per-sequence* sort-based dispatch.
+
+    Routing groups = sequences (GShard-style): the argsort/bincount run per
+    sequence and therefore stay local to the batch shard under data
+    parallelism -- a global token sort would force GSPMD to all-gather the
+    whole (T, D) activation (observed: +150 GiB/device temp on jamba).
+    Flop-honest: compute is E * C * d * f with
+    C = ceil(S * topk / E * cfg.moe_capacity).
+    """
+    capacity_factor = cfg.moe_capacity
+    x = constrain_batch(x)   # sorts/scatters below defeat propagation
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    C = int(max(1, math.ceil(S * K / E * capacity_factor)))
+
+    def route_one(xs: jax.Array) -> jax.Array:       # (S, D) -> (S, D)
+        logits = xs.astype(jnp.float32) @ p["router"]
+        gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), K)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        flat_e = idx.reshape(S * K)
+        order = jnp.argsort(flat_e)                  # stable, local
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(S * K) - starts[sorted_e]
+        keep = rank < C
+        buf_slot = jnp.where(keep, sorted_e * C + rank, E * C)  # drop bin
+        tok = order // K
+        xbuf = jnp.zeros((E * C + 1, D), xs.dtype).at[buf_slot].set(xs[tok])
+        xe = xbuf[:-1].reshape(E, C, D)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * \
+            jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+        ye = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * C, D)
+        ye = jnp.concatenate([ye, jnp.zeros((1, D), ye.dtype)], axis=0)
+        contrib = ye[buf_slot] * gates.reshape(S * K)[order][:, None] \
+            .astype(ye.dtype) * keep[:, None]
+        return jnp.zeros((S, D), xs.dtype).at[tok].add(contrib)
+
+    return constrain_batch(jax.vmap(route_one)(x))
+
+
+# ----------------------------------------------------------------- mamba2
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * n
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(
+            k1, (d, 2 * d_in + 2 * n + nh), dtype) * std,
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, conv_dim),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": jax.random.normal(k3, (d_in, d), dtype) * std,
+    }
+
+
+def _mamba_split(p: Params, cfg: ModelConfig, x: jax.Array):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * n], axis=-1)
+    return z, xbc, dt, d_in, n, nh
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, kernel K.  state: (B, K-1, C) rolling window."""
+    K = w.shape[0]
+    if state is not None:
+        ctx = jnp.concatenate([state, xbc], axis=1)
+        new_state = ctx[:, -(K - 1):, :] if K > 1 else state
+    else:
+        ctx = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = ctx[:, -(K - 1):, :] if K > 1 else None
+    out = sum(ctx[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba_block(p: Params, cfg: ModelConfig, x: jax.Array,
+                cache: Params | None = None, chunk: int = 128):
+    """Mamba-2 SSD block.  Train/prefill: chunked scan; decode: recurrence.
+
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    z, xbc, dt, d_in, n, nh = _mamba_split(p, cfg, x)
+    hd = cfg.ssm_head_dim
+    A = -jnp.exp(p["A_log"])                                 # (nh,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+
+    if cache is not None and S == 1:
+        xbc_conv, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                            cache["conv"])
+        xs, Bm, Cm = jnp.split(xbc_conv, [d_in, d_in + n], axis=-1)
+        xh = xs.reshape(B, 1, nh, hd).astype(jnp.float32)
+        dtb = dt[:, 0]                                       # (B, nh)
+        da = jnp.exp(dtb * A)                                # (B, nh)
+        bt = Bm[:, 0].astype(jnp.float32)                    # (B, n)
+        ct = Cm[:, 0].astype(jnp.float32)
+        ssm = cache["ssm"]                                   # (B,nh,hd,n)
+        upd = (dtb[..., None] * xh[:, 0])[..., None] * bt[:, None, None, :]
+        ssm = ssm * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", ssm, ct)[:, None]     # (B,1,nh,hd)
+        new_cache = {"conv": conv_state, "ssm": ssm}
+    else:
+        xbc_conv, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs, Bm, Cm = jnp.split(xbc_conv, [d_in, d_in + n], axis=-1)
+        y, ssm_state = _ssd_chunked(
+            xs.reshape(B, S, nh, hd).astype(jnp.float32),
+            dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32), chunk)
+        new_cache = None
+        if cache is not None:  # prefill fills the cache
+            new_cache = {"conv": conv_state, "ssm": ssm_state}
+    yf = y.reshape(B, S, d_in).astype(x.dtype)
+    out = rmsnorm(yf * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return out @ p["out_proj"], new_cache
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int):
+    """State-space duality (Mamba-2): intra-chunk quadratic attention-like
+    term + inter-chunk recurrent state passing.
+
+    xh: (B,S,nh,hd) f32; dt: (B,S,nh); A: (nh,); Bm/Cm: (B,S,n).
+    Returns y: (B,S,nh,hd), final_state: (B,nh,hd,n).
+    """
+    B, S, nh, hd = xh.shape
+    n = Bm.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    xc = xh.reshape(B, nc, L, nh, hd)
+    dtc = dt.reshape(B, nc, L, nh)
+    Bc = Bm.reshape(B, nc, L, n)
+    Cc = Cm.reshape(B, nc, L, n)
+
+    da = dtc * A                                   # log-decay per step
+    cum = jnp.cumsum(da, axis=2)                   # (B,nc,L,nh)
+    # intra-chunk: y_intra[t] = sum_{s<=t} exp(cum_t - cum_s) dt_s x_s B_s.C_t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,L,L,nh)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    # mask *before* exp: above-diagonal seg is positive and overflows, and
+    # inf-through-where poisons gradients under fusion
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)           # (B,nc,L,L)
+    w = scores[..., None] * decay * dtc[:, :, None, :, :]    # (B,nc,L,L,nh)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", w, xc)
+
+    # chunk-level states: S_c = sum_s exp(cum_L - cum_s) dt_s x_s B_s^T
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,L,nh)
+    contrib = jnp.einsum("bclh,bclhp,bcln->bchpn",
+                         dtc * dec_end, xc, Bc)              # per chunk
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,nh)
+
+    def scan_fn(s, inp):
+        contrib_c, decay_c = inp
+        s_new = s * decay_c[..., None, None] + contrib_c
+        return s_new, s
+
+    s0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (contrib.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev = prev_states.transpose(1, 0, 2, 3, 4)              # (B,nc,nh,hd,n)
+    # inter-chunk: y_inter[t] = C_t . (exp(cum_t) * S_prev)
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                         Cc, prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(B, nc * L, nh, hd)
+    return y[:, :S], final

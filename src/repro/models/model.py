@@ -1,0 +1,250 @@
+"""Generic decoder stack covering all assigned architecture families.
+
+The layer pattern is periodic with period cfg.group_size (e.g. jamba:
+7 mamba + 1 attention, MoE every 2nd layer -> period 8).  Parameters are
+stored as one pytree per pattern position with leaves stacked over the
+n_groups repetitions, and the stack executes as a `lax.scan` over groups --
+keeping the lowered HLO compact at 72-layer/400B scale.
+
+Families:
+  dense / moe        causal GQA attention (+ optional MoE FFN)
+  ssm                Mamba-2 SSD blocks, no attention
+  hybrid             attention every cfg.attn_every layers (jamba)
+  vlm                cross-attention to stubbed image embeddings
+  encdec             bidirectional encoder + causal decoder w/ cross-attn
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------- init
+def init_layer(cfg: ModelConfig, j: int, key, dtype=jnp.bfloat16) -> Params:
+    """Parameters of pattern-position j (kind depends only on j)."""
+    keys = jax.random.split(key, 4)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), dtype),
+                 "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.is_attn_layer(j):
+        p["attn"] = L.init_attention(keys[0], cfg, dtype=dtype)
+    else:
+        p["mamba"] = L.init_mamba(keys[0], cfg, dtype=dtype)
+    if cfg.is_moe_layer(j):
+        p["moe"] = L.init_moe(keys[1], cfg, dtype=dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = L.init_mlp(keys[1], cfg, dtype=dtype)
+    if cfg.is_xattn_layer(j) or (cfg.encoder_layers and
+                                 cfg.cross_attn_every == 1):
+        p["lnx"] = jnp.ones((cfg.d_model,), dtype)
+        p["xattn"] = L.init_attention(keys[2], cfg, cross=True, dtype=dtype)
+    return p
+
+
+def init_encoder_layer(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(key, 2)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.init_attention(keys[0], cfg, dtype=dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": L.init_mlp(keys[1], cfg, dtype=dtype)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Params:
+    g = cfg.group_size
+    n_groups = cfg.layers // g
+    if cfg.layers % g:
+        raise ValueError(f"{cfg.name}: layers={cfg.layers} not divisible by "
+                         f"pattern period {g}")
+    k_embed, k_layers, k_head, k_enc = jax.random.split(key, 4)
+    params: Params = {
+        "embed": jax.random.normal(
+            k_embed, (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab), dtype) / math.sqrt(cfg.d_model)
+    pos_keys = jax.random.split(k_layers, g)
+    groups: list[Params] = []
+    for j in range(g):
+        gkeys = jax.random.split(pos_keys[j], n_groups)
+        stacked = jax.vmap(
+            lambda kk, jj=j: init_layer(cfg, jj, kk, dtype))(gkeys)
+        groups.append(stacked)
+    params["groups"] = tuple(groups)
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(k_enc, cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda kk: init_encoder_layer(cfg, kk, dtype))(ekeys)
+    return params
+
+
+# ------------------------------------------------------------------ cache
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, enc_len: int = 0) -> Params:
+    g = cfg.group_size
+    n_groups = cfg.layers // g
+    caches: list[Params] = []
+    for j in range(g):
+        if cfg.is_attn_layer(j):
+            shape = (n_groups, batch, max_len, cfg.kv_heads, cfg.hd)
+            caches.append({"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)})
+        else:
+            d_in = cfg.ssm_expand * cfg.d_model
+            nh = d_in // cfg.ssm_head_dim
+            conv_dim = d_in + 2 * cfg.ssm_state
+            caches.append({
+                "conv": jnp.zeros((n_groups, batch, cfg.ssm_conv - 1,
+                                   conv_dim), dtype),
+                "ssm": jnp.zeros((n_groups, batch, nh, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)})
+    cache: Params = {"pos": jnp.zeros((), jnp.int32),
+                     "layers": tuple(caches)}
+    if enc_len:
+        cache["enc"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+# ---------------------------------------------------------------- forward
+def _apply_layer(cfg: ModelConfig, j: int, p: Params, x: jax.Array,
+                 positions, cache_j, xkv, pos_scalar):
+    new_cache = cache_j
+    if cfg.is_attn_layer(j):
+        attn_cache = None
+        if cache_j is not None:
+            attn_cache = {"k": cache_j["k"], "v": cache_j["v"],
+                          "len": pos_scalar}
+        h, nc = L.attention_block(p["attn"], cfg, L.rmsnorm(x, p["ln1"],
+                                                            cfg.norm_eps),
+                                  positions, causal=True, cache=attn_cache)
+        if nc is not None:
+            new_cache = {"k": nc["k"], "v": nc["v"]}
+        x = x + h
+    else:
+        mcache = None
+        if cache_j is not None:
+            mcache = {"conv": cache_j["conv"], "ssm": cache_j["ssm"]}
+        h, nc = L.mamba_block(p["mamba"], cfg,
+                              L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                              cache=mcache)
+        if nc is not None:
+            new_cache = {"conv": nc["conv"], "ssm": nc["ssm"]}
+        x = x + h
+    if "xattn" in p and xkv is not None:
+        h, _ = L.attention_block(p["xattn"], cfg,
+                                 L.rmsnorm(x, p["lnx"], cfg.norm_eps),
+                                 positions, causal=False, kv_source=xkv)
+        x = x + h
+    if "moe" in p:
+        x = x + L.moe_block(p["moe"], cfg,
+                            L.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    elif "mlp" in p:
+        x = x + L.swiglu(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x, new_cache
+
+
+def encode(cfg: ModelConfig, params: Params, enc_embeds: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """Bidirectional encoder over stubbed frontend embeddings."""
+    positions = jnp.arange(enc_embeds.shape[1])
+
+    def body(x, p):
+        h, _ = L.attention_block(p["attn"], cfg,
+                                 L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                 positions, causal=False)
+        x = x + h
+        x = x + L.swiglu(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps))
+        return x, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, enc_embeds, params["encoder"])
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            xkv: jax.Array | None = None, cache: Params | None = None,
+            remat: bool = False) -> tuple[jax.Array, Params | None]:
+    """tokens (B, S) -> logits (B, S, V); updates cache when given.
+
+    xkv: stubbed modality embeddings (image patches / encoder output) for
+    vlm / encdec families.
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cache is not None:
+        pos_scalar = cache["pos"]
+        positions = pos_scalar + jnp.arange(S)
+    else:
+        pos_scalar = jnp.zeros((), jnp.int32)
+        positions = jnp.arange(S)
+    # modality source for cross-attention: encoder output (encdec) or raw
+    # patch embeddings (vlm); cached at prefill so decode steps reuse it
+    enc_cached = None
+    if cache is not None and "enc" in cache:
+        enc_cached = cache["enc"]
+    if xkv is not None and cfg.encoder_layers:
+        xkv = encode(cfg, params, xkv)
+    if xkv is None:
+        xkv = enc_cached
+
+    g = cfg.group_size
+    layer_caches = cache["layers"] if cache is not None else \
+        tuple([None] * g)
+
+    def group_body(x, xs):
+        gparams, gcache = xs
+        new_caches = []
+        for j in range(g):
+            cj = gcache[j] if gcache is not None else None
+
+            def layer_fn(x_, p_, c_, j_=j):
+                # layer boundary: batch on data axes (+ optional SP)
+                x_ = L.constrain_batch(x_, boundary=True)
+                return _apply_layer(cfg, j_, p_, x_, positions, c_, xkv,
+                                    pos_scalar)
+
+            if remat and g > 1:
+                # per-layer remat inside the group: otherwise one group's
+                # backward materializes all `g` layers' intermediates at
+                # once (observed: 185 GiB/device on jamba's 8-layer period)
+                layer_fn = jax.checkpoint(layer_fn)
+            x, nc = layer_fn(x, gparams[j], cj)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    if cache is not None:
+        x, new_layer_caches = jax.lax.scan(
+            body, x, (params["groups"], layer_caches))
+        new_cache = {"pos": pos_scalar + S, "layers": new_layer_caches}
+        if xkv is not None and (cfg.cross_attn_every or cfg.encoder_layers):
+            new_cache["enc"] = xkv
+    else:
+        x, _ = jax.lax.scan(body, x, (params["groups"],
+                                      tuple([None] * g)))
+        new_cache = None
+    x = L.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head
+    return logits, new_cache
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            labels: jax.Array, xkv: jax.Array | None = None,
+            remat: bool = False) -> jax.Array:
+    logits, _ = forward(cfg, params, tokens, xkv=xkv, remat=remat)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

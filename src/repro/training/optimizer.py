@@ -1,0 +1,83 @@
+"""Sharded AdamW with configurable state dtype.
+
+For the >=300B architectures the first/second moments are stored in
+bfloat16 (8-bit-Adam-style memory trick, see DESIGN.md) so the optimizer
+state fits 16 GB/chip on the single-pod mesh; updates always compute in
+float32.  Moment tensors inherit the parameter PartitionSpecs (ZeRO-style
+when the params are FSDP-sharded).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 20
+    state_dtype: Any = jnp.float32   # jnp.bfloat16 for the huge archs
+
+
+def init_state(params: Params, cfg: AdamWConfig) -> Params:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree: Params) -> jax.Array:
+    sq = jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def apply_updates(params: Params, grads: Params, state: Params,
+                  cfg: AdamWConfig) -> tuple[Params, Params]:
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if cfg.grad_clip else jnp.asarray(1.0)
+    lr = _schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m32.astype(cfg.state_dtype), v32.astype(cfg.state_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                 "v": tdef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_params, new_state

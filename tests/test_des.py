@@ -1,0 +1,139 @@
+"""DES engine: hand-checkable cases + hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from conftest import one_circuit_topology, random_comm_dags
+from repro.core.cluster import ClusterSpec
+from repro.core.dag import CommDAG, CommTask, Dep, make_virtual
+from repro.core.des import DESProblem, evaluate_nct, maxmin_fair_rates, \
+    simulate
+
+
+def _two_pod_cluster(B=1.0):
+    return ClusterSpec(num_pods=2, port_limits=(8, 8), nic_bandwidth=B)
+
+
+def _dag(tasks, deps, cluster=None):
+    return CommDAG([make_virtual()] + tasks, deps,
+                   cluster or _two_pod_cluster())
+
+
+def test_two_tasks_share_link_fairly():
+    dag = _dag(
+        [CommTask(1, 0, 1, 1, 1.0, (0,), (10,)),
+         CommTask(2, 0, 1, 1, 1.0, (1,), (11,))],
+        [Dep(0, 1, 0.0), Dep(0, 2, 0.0)])
+    res = simulate(DESProblem(dag), np.array([[0, 1], [1, 0]]))
+    assert res.makespan == pytest.approx(2.0)
+    assert res.finish[1] == pytest.approx(2.0)
+
+
+def test_staggered_third_task():
+    dag = _dag(
+        [CommTask(1, 0, 1, 1, 1.0, (0,), (10,)),
+         CommTask(2, 0, 1, 1, 1.0, (1,), (11,)),
+         CommTask(3, 0, 1, 1, 1.0, (2,), (12,))],
+        [Dep(0, 1, 0.0), Dep(0, 2, 0.0), Dep(0, 3, 0.5)])
+    res = simulate(DESProblem(dag), np.array([[0, 1], [1, 0]]))
+    # 0.5s at rate 1/2 each, then 1/3 each until 1&2 done, then 3 alone
+    assert res.makespan == pytest.approx(3.0)
+    assert res.start[3] == pytest.approx(0.5)
+
+
+def test_chain_critical_path():
+    dag = _dag(
+        [CommTask(1, 0, 1, 1, 1.0, (0,), (10,)),
+         CommTask(2, 1, 0, 1, 1.0, (10,), (0,))],
+        [Dep(0, 1, 0.0), Dep(1, 2, 0.5)])
+    res = simulate(DESProblem(dag), np.array([[0, 1], [1, 0]]))
+    assert res.makespan == pytest.approx(2.5)
+    assert res.critical_path == [0, 1, 2]
+    assert res.crit_delta == pytest.approx(0.5)
+    assert res.comm_time == pytest.approx(2.0)
+
+
+def test_nic_constraint_binds():
+    # one GPU sources both tasks to different pods: NIC halves each rate
+    cluster = ClusterSpec(num_pods=3, port_limits=(4, 4, 4),
+                          nic_bandwidth=1.0)
+    dag = _dag([CommTask(1, 0, 1, 1, 1.0, (0,), (10,)),
+                CommTask(2, 0, 2, 1, 1.0, (0,), (20,))],
+               [Dep(0, 1, 0.0), Dep(0, 2, 0.0)], cluster)
+    x = np.zeros((3, 3), dtype=int)
+    x[0, 1] = x[1, 0] = x[0, 2] = x[2, 0] = 2  # links not the bottleneck
+    res = simulate(DESProblem(dag), x)
+    assert res.makespan == pytest.approx(2.0)
+
+
+def test_weighted_flows_share():
+    # task1 has 3 flows, task2 has 1; per-flow fairness -> 3:1 rate split
+    dag = _dag(
+        [CommTask(1, 0, 1, 3, 3.0, (0, 1, 2), (10, 11, 12)),
+         CommTask(2, 0, 1, 1, 1.0, (3,), (13,))],
+        [Dep(0, 1, 0.0), Dep(0, 2, 0.0)])
+    prob = DESProblem(dag)
+    caps = prob.link_caps(np.array([[0, 4], [4, 0]]))
+    active = np.array([False, True, True])
+    rates = maxmin_fair_rates(prob, active, caps)
+    assert rates[1] == pytest.approx(3.0)
+    assert rates[2] == pytest.approx(1.0)
+
+
+def test_infeasible_topology():
+    dag = _dag([CommTask(1, 0, 1, 1, 1.0, (0,), (10,))], [Dep(0, 1, 0.0)])
+    res = simulate(DESProblem(dag), np.zeros((2, 2)))
+    assert not res.feasible and res.makespan == np.inf
+
+
+@settings(max_examples=40, deadline=None)
+@given(random_comm_dags())
+def test_property_invariants(dag):
+    prob = DESProblem(dag)
+    x = one_circuit_topology(dag)
+    res = simulate(prob, x)
+    assert res.feasible
+    n = dag.num_tasks
+    # precedence respected
+    for d in dag.deps:
+        assert res.start[d.succ] >= res.finish[d.pre] + d.delta - 1e-9
+    # finish after start, makespan is max finish
+    real = slice(1, n)
+    assert (res.finish[real] >= res.start[real] - 1e-12).all()
+    assert res.makespan == pytest.approx(np.max(res.finish[real]))
+    # tasks can never beat their minimum physical duration
+    for t in dag.real_tasks():
+        tau_min = t.volume / (t.flows * dag.cluster.nic_bandwidth)
+        assert res.finish[t.tid] - res.start[t.tid] >= tau_min * (1 - 1e-9)
+    # critical path decomposition: makespan == sum(tau) + sum(delta)
+    assert 0 <= res.crit_delta <= res.makespan + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_comm_dags())
+def test_property_more_circuits_never_hurt(dag):
+    prob = DESProblem(dag)
+    x1 = one_circuit_topology(dag)
+    m1 = simulate(prob, x1).makespan
+    m2 = simulate(prob, x1 * 2).makespan
+    ideal = simulate(prob, x1, ideal=True).makespan
+    assert m2 <= m1 * (1 + 1e-9)
+    assert ideal <= m2 * (1 + 1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_comm_dags())
+def test_property_nct_at_least_one(dag):
+    rep = evaluate_nct(DESProblem(dag), one_circuit_topology(dag))
+    assert rep.nct >= 1 - 1e-6
+
+
+def test_rate_trace_conserves_volume(small_dag):
+    prob = DESProblem(small_dag)
+    x = one_circuit_topology(small_dag)
+    res = simulate(prob, x, record_rates=True)
+    sent = np.zeros(small_dag.num_tasks)
+    for t0, t1, rates in res.rate_trace:
+        sent += rates * (t1 - t0)
+    for t in small_dag.real_tasks():
+        assert sent[t.tid] == pytest.approx(t.volume, rel=1e-6)

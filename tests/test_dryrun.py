@@ -1,0 +1,80 @@
+"""Dry-run machinery: HLO analyzer exactness + quick-mode subprocess
+(full-mesh lower/compile for representative cells; the complete 40-cell
+matrix runs via `python -m repro.launch.dryrun` and is reported in
+EXPERIMENTS.md)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.hloanalysis import analyze, parse_computations
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    probe = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hloanalysis import analyze
+
+        def f(x, w):
+            def body(c, _):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, None, length=7)
+            return y.sum()
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        c = jax.jit(f, in_shardings=(NamedSharding(mesh, P("data", None)),
+                                     NamedSharding(mesh, P(None, "model")))
+                    ).lower(jax.ShapeDtypeStruct((16, 64), jnp.float32),
+                            jax.ShapeDtypeStruct((64, 64), jnp.float32)
+                            ).compile()
+        cost = analyze(c.as_text())
+        assert cost.flops == 7 * 2 * 8 * 16 * 64, cost.flops
+        assert cost.collective_bytes["all-gather"] == 7 * 8 * 64 * 4
+        print("ANALYZER_OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", probe],
+                         capture_output=True, text=True, cwd="/root/repo",
+                         timeout=300)
+    assert "ANALYZER_OK" in out.stdout, out.stdout + out.stderr
+
+
+def test_parser_handles_tuples_and_fusions():
+    txt = """
+%helper (p: f32[4,4]) -> f32[4,4] {
+  ROOT %d = f32[4,4]{1,0} dot(%p, %p), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  ROOT %fus = f32[4,4]{1,0} fusion(%a), kind=kLoop, calls=%helper
+}
+"""
+    cost = analyze(txt)
+    assert cost.flops == 2 * 4 * 4 * 4
+
+
+@pytest.mark.slow
+def test_quick_dryrun_subprocess(tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--quick",
+           "--arch", "qwen3-0.6b,granite-moe-1b-a400m,mamba2-130m",
+           "--shape", "train_4k,decode_32k", "--mesh", "multi",
+           "--out", str(tmp_path)]
+    out = subprocess.run(cmd, capture_output=True, text=True,
+                         cwd="/root/repo", timeout=900,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "HOME": "/root"})
+    assert "0 errors" in out.stdout, out.stdout[-3000:] + out.stderr[-2000:]
+    cells = list(tmp_path.glob("*.json"))
+    assert len(cells) == 6
+    for c in cells:
+        data = json.loads(c.read_text())
+        assert data["status"] == "ok", data
+        assert data["flops_per_device"] > 0
+        assert data["devices"] == 512

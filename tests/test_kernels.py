@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (the kernels target TPU; interpret executes the kernel body on CPU)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+from repro.kernels import ops
+from repro.kernels.ref import (NEG_INF, fill_matvec_ref, maxplus_ref,
+                               tclosure_step_ref, transitive_closure_ref)
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n", [1, 5, 64, 127, 128, 130, 257])
+@pytest.mark.parametrize("density", [0.02, 0.2])
+def test_tclosure_step_shapes(n, density):
+    a = RNG.random((n, n)) < density
+    got = np.asarray(ops.tclosure_step(a, backend="pallas", interpret=True))
+    want = np.asarray(tclosure_step_ref(jnp.asarray(a)))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("dtype", [np.bool_, np.int8, np.int32, np.float32])
+def test_tclosure_dtypes(dtype):
+    a = (RNG.random((40, 40)) < 0.1).astype(dtype)
+    got = np.asarray(ops.tclosure_step(a, backend="pallas", interpret=True))
+    want = np.asarray(tclosure_step_ref(jnp.asarray(a)))
+    assert (got == want).all()
+
+
+def test_transitive_closure_vs_bruteforce():
+    n = 30
+    a = np.triu(RNG.random((n, n)) < 0.15, k=1)
+    got = np.asarray(ops.transitive_closure(a, backend="pallas",
+                                            interpret=True))
+    reach = a.copy()
+    for _ in range(n):
+        reach = reach | (reach @ a)
+    assert (got == reach).all()
+    ref = np.asarray(transitive_closure_ref(jnp.asarray(a)))
+    assert (got == ref).all()
+
+
+@pytest.mark.parametrize("shape", [(3, 4, 5), (64, 64, 64), (130, 17, 70),
+                                   (1, 1, 1), (128, 128, 128)])
+def test_maxplus_shapes(shape):
+    m, k, n = shape
+    a = np.where(RNG.random((m, k)) < 0.4,
+                 RNG.random((m, k)) * 10, NEG_INF).astype(np.float32)
+    b = np.where(RNG.random((k, n)) < 0.4,
+                 RNG.random((k, n)) * 10, NEG_INF).astype(np.float32)
+    got = np.asarray(ops.maxplus(a, b, backend="pallas", interpret=True))
+    want = np.asarray(maxplus_ref(jnp.asarray(a), jnp.asarray(b)))
+    assert np.allclose(got, want, rtol=1e-6, atol=1e-4)
+
+
+def test_longest_paths_vs_bellman():
+    n = 24
+    adj_mask = np.triu(RNG.random((n, n)) < 0.2, k=1)
+    adj = np.where(adj_mask, RNG.random((n, n)) * 5, NEG_INF) \
+        .astype(np.float32)
+    got = np.asarray(ops.longest_paths(adj, backend="pallas",
+                                       interpret=True))
+    dist = np.where(np.eye(n, dtype=bool), 0.0, NEG_INF)
+    for _ in range(n):
+        nd = dist.copy()
+        for i in range(n):
+            for j in range(n):
+                if adj_mask[i, j]:
+                    nd[:, j] = np.maximum(nd[:, j], dist[:, i] + adj[i, j])
+        dist = nd
+    mask = dist > NEG_INF / 2
+    assert np.allclose(got[mask], dist[mask], rtol=1e-5)
+    assert (got[~mask] <= NEG_INF / 2 + 1).all()
+
+
+@pytest.mark.parametrize("shape", [(3, 5), (100, 257), (130, 64), (1, 1),
+                                   (128, 128)])
+@pytest.mark.parametrize("rhs_cols", [1, 2, 3])
+def test_fill_matvec_shapes(shape, rhs_cols):
+    c, n = shape
+    w = (RNG.random((c, n)) * (RNG.random((c, n)) < 0.3)).astype(np.float32)
+    rhs = RNG.random((n, rhs_cols)).astype(np.float32)
+    got = np.asarray(ops.fill_matvec(w, rhs, backend="pallas",
+                                     interpret=True))
+    want = np.asarray(fill_matvec_ref(jnp.asarray(w), jnp.asarray(rhs)))
+    assert np.allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2**31 - 1))
+def test_property_closure_idempotent(n, seed):
+    rng = np.random.default_rng(seed)
+    a = np.triu(rng.random((n, n)) < 0.2, k=1)
+    cl = np.asarray(ops.transitive_closure(a, backend="pallas",
+                                           interpret=True))
+    cl2 = np.asarray(ops.tclosure_step(cl, backend="pallas",
+                                       interpret=True))
+    assert (cl2 == cl).all()   # closure is a fixed point
+
+
+def test_ref_backend_default_on_cpu():
+    a = RNG.random((16, 16)) < 0.2
+    got = np.asarray(ops.tclosure_step(a))   # backend auto -> ref on CPU
+    want = np.asarray(tclosure_step_ref(jnp.asarray(a)))
+    assert (got == want).all()

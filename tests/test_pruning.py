@@ -1,0 +1,92 @@
+"""Algs. 1/2/4: windows, bounds, closures."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from conftest import gpt7b_job, one_circuit_topology, random_comm_dags
+from repro.core.des import DESProblem, simulate
+from repro.core.pruning import (cal_task_time_windows, estimate_t_up,
+                                profile_anchors, task_time_index_pruning)
+from repro.core.schedule import build_comm_dag
+from repro.core.xbound import (mwis, reachability_bitset,
+                               reachability_kernel, x_upper_bound)
+
+
+@pytest.fixture(scope="module")
+def dag():
+    return build_comm_dag(gpt7b_job(4))
+
+
+def test_est_lct_windows_are_consistent(dag):
+    prob = DESProblem(dag)
+    t_up = estimate_t_up(prob)
+    est, lct = cal_task_time_windows(dag, t_up)
+    assert (est[1:] <= lct[1:] + 1e-9).all()
+    # the baseline schedule fits inside the windows
+    res = simulate(prob, one_circuit_topology(dag))
+    for t in dag.real_tasks():
+        assert res.start[t.tid] >= est[t.tid] - 1e-9
+        assert res.finish[t.tid] <= lct[t.tid] + 1e-9
+
+
+def test_index_windows_contain_baseline(dag):
+    prob = DESProblem(dag)
+    res, anchors, K = profile_anchors(prob)
+    w = task_time_index_pruning(dag, K, anchors)
+    ti = res.task_interval
+    for m in range(1, dag.num_tasks):
+        assert w.k_min[m] <= ti[m, 0] <= ti[m, 1] <= w.k_max[m]
+
+
+def test_pruning_reduces_search_space(dag):
+    prob = DESProblem(dag)
+    _, anchors, K = profile_anchors(prob)
+    w = task_time_index_pruning(dag, K, anchors)
+    dense = dag.num_real_tasks * K
+    assert w.num_task_intervals() < 0.3 * dense
+
+
+@settings(max_examples=20, deadline=None)
+@given(random_comm_dags(max_tasks=9))
+def test_property_closure_backends_agree(dag):
+    assert (reachability_bitset(dag) == reachability_kernel(dag)).all()
+
+
+def test_mwis_exact_small():
+    # path graph a-b-c with weights 2,3,2 -> {a,c}=4 > {b}=3
+    w = np.array([2.0, 3.0, 2.0])
+    adj = np.array([[0, 1, 0], [1, 0, 1], [0, 1, 0]], dtype=bool)
+    assert mwis(w, adj) == pytest.approx(4.0)
+    # triangle: best single vertex
+    adj2 = ~np.eye(3, dtype=bool)
+    assert mwis(w, adj2) == pytest.approx(3.0)
+    # empty graph: everything
+    assert mwis(w, np.zeros((3, 3), bool)) == pytest.approx(7.0)
+
+
+def test_xbound_upper_bounds_des_concurrency(dag):
+    """Alg. 2's bound must dominate any simultaneous flow weight the DES
+    actually achieves on an abundant topology."""
+    prob = DESProblem(dag)
+    xbar = x_upper_bound(dag)
+    x = one_circuit_topology(dag) * 8
+    U = np.array(dag.cluster.port_limits)
+    res = simulate(prob, np.minimum(x, np.minimum.outer(U, U)),
+                   record_rates=True)
+    flows = dag.flows()
+    for t0, t1, rates in res.rate_trace:
+        active = rates > 0
+        for i, j in dag.pod_pairs():
+            tids = [t.tid for t in dag.real_tasks()
+                    if t.pair == (i, j) and active[t.tid]]
+            conc = sum(flows[m] for m in tids)
+            cap = min(U[i], U[j])
+            assert min(conc, cap) <= xbar[i, j] + 1e-9
+
+
+def test_xbound_within_ports(dag):
+    xbar = x_upper_bound(dag)
+    U = np.array(dag.cluster.port_limits)
+    for i, j in dag.undirected_pairs():
+        assert 1 <= xbar[i, j] <= min(U[i], U[j])
+        assert xbar[i, j] == xbar[j, i]

@@ -1,0 +1,97 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Reproduces the paper's headline qualitative claims on a small instance:
+  1. DAG-aware methods beat traffic-matrix baselines (Fig. 6 direction).
+  2. DELTA-Fast matches DELTA-Topo (Sec. V-B observation).
+  3. Joint rate control is at least as good as fair sharing (Fig. 7).
+  4. Port minimization frees ports without hurting makespan (Fig. 9).
+  5. Reallocating freed ports to a bottlenecked co-tenant cuts its NCT
+     (Fig. 10 direction).
+"""
+import numpy as np
+import pytest
+
+from conftest import gpt7b_job
+from repro.core.api import compare, optimize
+from repro.core.ga import GAOptions
+from repro.core.milp import MILPOptions
+from repro.core.schedule import build_comm_dag
+
+pytestmark = pytest.mark.milp
+
+
+@pytest.fixture(scope="module")
+def dag():
+    # lower bandwidth -> communication-bound -> differences show up
+    return build_comm_dag(gpt7b_job(4), inter_pod_gbps=200.0)
+
+
+@pytest.fixture(scope="module")
+def plans(dag):
+    return compare(dag,
+                   methods=("prop-alloc", "sqrt-alloc", "iter-halve",
+                            "delta-fast", "delta-topo", "delta-joint"),
+                   ga_options=GAOptions(seed=0, time_limit=30, patience=20),
+                   milp_options=MILPOptions(time_limit=120))
+
+
+def test_all_plans_feasible(plans):
+    assert all(r.feasible for r in plans.values())
+
+
+def test_delta_beats_or_matches_baselines(plans):
+    best_baseline = min(plans[m].nct for m in
+                        ("prop-alloc", "sqrt-alloc", "iter-halve"))
+    assert plans["delta-fast"].nct <= best_baseline + 1e-9
+    assert plans["delta-topo"].nct <= best_baseline + 1e-9
+
+
+def test_fast_matches_topo(plans):
+    """Paper Sec. V-B: DELTA-Fast performs identically to DELTA-Topo.
+
+    Near-parity both ways; asymmetric tolerance because the HiGHS solve may
+    stop at its time limit with a slightly sub-optimal incumbent while the
+    GA keeps polishing (observed: fast 0.6% *better* than topo)."""
+    fast, topo = plans["delta-fast"].nct, plans["delta-topo"].nct
+    assert fast <= topo * 1.01
+    assert topo <= fast * 1.02
+
+
+def test_joint_at_least_as_good(plans):
+    assert plans["delta-joint"].makespan <= \
+        plans["delta-topo"].makespan * (1 + 1e-6)
+
+
+def test_port_minimization_and_reallocation(dag):
+    # phase 2 saves ports at unchanged makespan
+    base = optimize(dag, "delta-joint",
+                    milp_options=MILPOptions(time_limit=120))
+    saved = optimize(dag, "delta-joint", port_min=True,
+                     milp_options=MILPOptions(time_limit=120))
+    assert saved.total_ports <= base.total_ports
+    assert saved.makespan <= base.makespan * (1 + 1e-4)
+
+    # grant the freed ports to a reversed-placement co-tenant (Model^T)
+    job_t = gpt7b_job(4)
+    dag_t = build_comm_dag(job_t, inter_pod_gbps=200.0,
+                           reverse_stages=True)
+    U = np.asarray(dag.cluster.port_limits)
+    used = saved.x.sum(axis=1)
+    surplus = U - used
+    assert (surplus >= 0).all()
+    boosted_cluster = dag_t.cluster.with_port_limits(U + surplus)
+    dag_boost = build_comm_dag(job_t, inter_pod_gbps=200.0,
+                               reverse_stages=True,
+                               cluster=boosted_cluster)
+    r_plain = optimize(dag_t, "delta-fast",
+                       ga_options=GAOptions(seed=0, time_limit=20,
+                                            patience=15))
+    r_boost = optimize(dag_boost, "delta-fast",
+                       ga_options=GAOptions(seed=0, time_limit=20,
+                                            patience=15))
+    assert r_boost.nct <= r_plain.nct + 1e-9
+
+
+def test_quickstart_example_runs():
+    import examples.quickstart as q
+    q.main(fast=True)

@@ -1,0 +1,152 @@
+"""Training substrate: optimizer, checkpoint/restart, data determinism,
+resilient loop, loss decrease end-to-end."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.distributed.fault_tolerance import (FailureInjector, StepWatchdog,
+                                               run_resilient)
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training import train_step as ts
+from repro.training.data import SyntheticLM
+
+
+def test_adamw_minimizes_quadratic():
+    ocfg = opt.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init_state(params, ocfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.apply_updates(params, grads, state, ocfg)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_bf16_state_dtype():
+    ocfg = opt.AdamWConfig(state_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    state = opt.init_state(params, ocfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    params2, state2 = opt.apply_updates(params, {"w": params["w"]}, state,
+                                        ocfg)
+    assert params2["w"].dtype == jnp.bfloat16
+    assert state2["v"]["w"].dtype == jnp.bfloat16
+
+
+def test_synthetic_data_deterministic():
+    d = SyntheticLM(vocab=101, seed=7)
+    b1 = d.batch(12, 4, 32)
+    b2 = d.batch(12, 4, 32)
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert (b1["labels"] == b2["labels"]).all()
+    b3 = d.batch(13, 4, 32)
+    assert (b1["tokens"] != b3["tokens"]).any()
+    # labels are next-token targets of a learnable process
+    assert b1["labels"].shape == (4, 32)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = REGISTRY["qwen3-0.6b"].config.reduced()
+    ocfg = opt.AdamWConfig()
+    state = ts.init_train_state(cfg, ocfg, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    path = ckpt.save(str(tmp_path), 42, state, extra={"note": "hi"})
+    assert os.path.isdir(path)
+    restored, step, extra = ckpt.restore(path, state)
+    assert step == 42 and extra["note"] == "hi"
+    same = jax.tree.map(lambda a, b: bool((np.asarray(a) ==
+                                           np.asarray(b)).all()),
+                        state, restored)
+    assert all(jax.tree.leaves(same))
+    assert ckpt.latest(str(tmp_path)) == path
+
+
+def test_checkpoint_elastic_restore_with_shardings(tmp_path):
+    """Restore applies target shardings (degenerate 1-device mesh here --
+    the API path is identical on a real multi-chip mesh)."""
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_host_mesh
+    cfg = REGISTRY["qwen3-0.6b"].config.reduced()
+    ocfg = opt.AdamWConfig()
+    state = ts.init_train_state(cfg, ocfg, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    path = ckpt.save(str(tmp_path), 1, state)
+    mesh = make_host_mesh(1)
+    sh = shd.named(shd.tree_specs(state, mesh, "state", cfg=cfg), mesh)
+    restored, step, _ = ckpt.restore(path, state, shardings=sh)
+    assert step == 1
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding is not None
+
+
+def test_resilient_loop_replays_after_failure(tmp_path):
+    cfg = REGISTRY["qwen3-0.6b"].config.reduced()
+    ocfg = opt.AdamWConfig(lr=1e-3)
+    data = SyntheticLM(vocab=cfg.vocab, seed=0)
+    state = ts.init_train_state(cfg, ocfg, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    step_fn = jax.jit(ts.make_train_step(cfg, ocfg, remat=False))
+    injector = FailureInjector(fail_at=(7,))
+    box = {"state": state}
+    losses = {}
+
+    def do_step(step):
+        injector.maybe_fail(step)
+        batch = {k: jnp.asarray(v) for k, v in
+                 data.batch(step, 2, 16).items()}
+        box["state"], m = step_fn(box["state"], batch)
+        losses.setdefault(step, []).append(float(m["loss"]))
+        return {"loss": float(m["loss"])}
+
+    def save_ckpt(step):
+        ckpt.save(str(tmp_path), step, box["state"])
+
+    def restore_ckpt():
+        latest = ckpt.latest(str(tmp_path))
+        box["state"], step, _ = ckpt.restore(latest, box["state"])
+        return step
+
+    out = run_resilient(10, do_step, save_ckpt, restore_ckpt, ckpt_every=5,
+                        watchdog=StepWatchdog())
+    assert out["restarts"] == 1 and out["steps"] == 10
+    # replayed steps produce identical losses (deterministic pipeline)
+    for step, vals in losses.items():
+        assert all(v == pytest.approx(vals[0], rel=1e-5) for v in vals), \
+            f"step {step} diverged on replay"
+
+
+def test_training_reduces_loss():
+    cfg = REGISTRY["qwen3-0.6b"].config.reduced()
+    ocfg = opt.AdamWConfig(lr=2e-3, warmup_steps=5)
+    data = SyntheticLM(vocab=cfg.vocab, seed=1)
+    state = ts.init_train_state(cfg, ocfg, jax.random.PRNGKey(0),
+                                dtype=jnp.float32)
+    step_fn = jax.jit(ts.make_train_step(cfg, ocfg, remat=False))
+    losses = []
+    for step in range(40):
+        batch = {k: jnp.asarray(v) for k, v in
+                 data.batch(step, 4, 32).items()}
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = REGISTRY["qwen3-0.6b"].config.reduced()
+    ocfg = opt.AdamWConfig(lr=1e-3, grad_clip=0.0)
+    data = SyntheticLM(vocab=cfg.vocab, seed=2)
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0, 8, 16).items()}
+    s0 = ts.init_train_state(cfg, ocfg, jax.random.PRNGKey(0),
+                             dtype=jnp.float32)
+    s1, m1 = jax.jit(ts.make_train_step(cfg, ocfg, accum_steps=1,
+                                        remat=False))(s0, batch)
+    s4, m4 = jax.jit(ts.make_train_step(cfg, ocfg, accum_steps=4,
+                                        remat=False))(s0, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-4)
+    diff = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                        s1["params"], s4["params"])
+    assert max(jax.tree.leaves(diff)) < 5e-3
