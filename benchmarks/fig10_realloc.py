@@ -1,41 +1,50 @@
 """Fig. 10: reduced NCTs of bandwidth-bottlenecked workloads by
-reallocating surplus ports (Model^T = reversed stage-to-pod mapping)."""
+reallocating surplus ports (Model^T = reversed stage-to-pod mapping).
+
+Runs end-to-end through the fleet subsystem: a port-minimized donor and its
+reversed-placement co-tenant are admitted onto the same pods, the donor's
+trimmed ports are donated to the pool, and the replanning loop waterfills
+them into the co-tenant, whose boosted topology is chosen by one batched
+`JaxDES` evaluation (`repro.fleet.realloc`).
+"""
 from __future__ import annotations
 
-import numpy as np
+import time
 
-from benchmarks.common import Row, bench_dag, ga_opts, run_method, save_json
+from benchmarks.common import Row, ga_opts, save_json
 from repro.configs import PAPER_WORKLOADS, make_job
-from repro.core.ga import delta_fast, trim_ports
-from repro.core.schedule import build_comm_dag
+from repro.fleet import FleetPlanner, FleetSpec, JobArrival
 
 
 def run(full: bool = False) -> list[Row]:
     rows = []
     payload = {}
     for w in ("gpt-7b", "mixtral-8x22b"):
-        # donor job: port-minimized topology frees ports
-        mb = None if full else 2 * PAPER_WORKLOADS[w].plan.pp
-        dag = bench_dag(w, bandwidth=100.0, full=full, mb=mb)
-        ga = delta_fast(dag, ga_opts(full))
-        x_saved = trim_ports(dag, ga.x)
-        U = np.asarray(dag.cluster.port_limits)
-        surplus = U - x_saved.sum(axis=1)
-        # bottlenecked co-tenant: same workload, reversed placement
-        dag_t = bench_dag(w, bandwidth=100.0, full=full, mb=mb,
-                          reverse=True)
-        r0, dt0 = run_method(dag_t, "delta-fast", full)
         arch = PAPER_WORKLOADS[w]
-        job = make_job(arch, microbatches=mb or
-                       arch.plan.num_microbatches)
-        boosted = dag_t.cluster.with_port_limits(U + surplus)
-        dag_boost = build_comm_dag(job, inter_pod_gbps=100.0,
-                                   reverse_stages=True, cluster=boosted)
-        r1, dt1 = run_method(dag_boost, "delta-fast", full)
-        derived = (f"nct_before={r0.nct:.4f};nct_after={r1.nct:.4f};"
-                   f"surplus_ports={int(surplus.sum())}")
+        mb = arch.plan.num_microbatches if full else 2 * arch.plan.pp
+        job = make_job(arch, microbatches=mb)
+        placement = job.placement()
+        fleet = FleetSpec(num_pods=placement.num_pods,
+                          ports_per_pod=2 * max(placement.port_limits()),
+                          nic_gbps=100.0)
+        planner = FleetPlanner(fleet, ga_options=ga_opts(full), seed=0)
+
+        t0 = time.time()
+        donor = planner.handle(JobArrival(
+            "model", job, port_min=True))       # frees + donates ports
+        dt0 = time.time() - t0
+        t0 = time.time()
+        cot = planner.handle(JobArrival(
+            "model_t", job, reverse_stages=True))   # bottlenecked co-tenant
+        dt1 = time.time() - t0
+
+        nct_before = cot["nct"]
+        nct_after = planner.tenants["model_t"].plan.nct
+        surplus = donor["donated_ports"]
+        derived = (f"nct_before={nct_before:.4f};nct_after={nct_after:.4f};"
+                   f"surplus_ports={surplus}")
         rows.append(Row(f"fig10/{w}", (dt0 + dt1) * 1e6, derived))
-        payload[w] = {"before": r0.nct, "after": r1.nct,
-                      "surplus": int(surplus.sum())}
+        payload[w] = {"before": nct_before, "after": nct_after,
+                      "surplus": surplus}
     save_json("fig10_realloc", payload)
     return rows

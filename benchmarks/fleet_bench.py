@@ -1,0 +1,74 @@
+"""Fleet planner scaling: 2-8 concurrent tenants on shared pods.
+
+Admits alternating donor (port-minimized) / bottlenecked (reversed
+placement) tenants of the same workload into one fleet and measures the
+whole event stream: admission + planning walltime per tenant, plan-cache
+hit rate (repeated workloads should only solve twice), surplus-pass batched
+DES evaluations, and the mean NCT improvement the reallocation bought.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, save_json
+from repro.configs import PAPER_WORKLOADS, make_job
+from repro.core.ga import GAOptions
+from repro.fleet import FleetPlanner, FleetSpec, JobArrival
+
+
+def _bench_ga(full: bool) -> GAOptions:
+    return GAOptions(seed=0, pop_size=32 if full else 16,
+                     time_limit=25.0 if full else 8.0,
+                     patience=30 if full else 12)
+
+
+def run(full: bool = False) -> list[Row]:
+    arch = PAPER_WORKLOADS["gpt-7b"]
+    mb = arch.plan.num_microbatches if full else arch.plan.pp
+    job = make_job(arch, microbatches=mb)
+    placement = job.placement()
+    span = placement.num_pods
+    ent = max(placement.port_limits())
+
+    rows = []
+    payload = {}
+    for tenants in (2, 4, 6, 8):
+        # pairs of tenants co-locate on one pod window
+        windows = (tenants + 1) // 2
+        fleet = FleetSpec(num_pods=span * windows, ports_per_pod=2 * ent,
+                          nic_gbps=100.0)
+        planner = FleetPlanner(fleet, ga_options=_bench_ga(full), seed=0)
+        events = []
+        for i in range(tenants):
+            if i % 2 == 0:
+                events.append(JobArrival(f"donor{i}", job, port_min=True))
+            else:
+                events.append(JobArrival(f"needy{i}", job,
+                                         reverse_stages=True))
+        t0 = time.time()
+        planner.process(events)
+        elapsed = time.time() - t0
+
+        report = planner.report()
+        gains = []
+        for name, t in planner.tenants.items():
+            if t.base_plan is not None and np.isfinite(t.base_plan.nct):
+                gains.append(t.base_plan.nct - t.plan.nct)
+        mean_gain = float(np.mean(gains)) if gains else 0.0
+        cache = report["cache"]
+        derived = (f"tenants={tenants};cache_hits={cache['hits']};"
+                   f"misses={cache['misses']};"
+                   f"realloc_batches={report['realloc']['batches']};"
+                   f"mean_nct_gain={mean_gain:.4f}")
+        rows.append(Row(f"fleet/T={tenants}", elapsed / tenants * 1e6,
+                        derived))
+        payload[tenants] = {"elapsed_s": elapsed, "cache": cache,
+                            "realloc": report["realloc"],
+                            "mean_nct_gain": mean_gain,
+                            "ncts": {n: t.plan.nct
+                                     for n, t in planner.tenants.items()}}
+        planner.ledger.check()
+    save_json("fleet_bench", payload)
+    return rows

@@ -12,6 +12,7 @@ Methods:
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 
@@ -96,7 +97,10 @@ def optimize(dag: CommDAG, method: str = "delta-fast",
                            history_len=len(res.history))
         return out
 
-    opts = milp_options or MILPOptions()
+    # shallow-copy: optimize() tweaks port_min/fairness per method and must
+    # not leak those into the caller's (possibly shared) options object
+    opts = dataclasses.replace(milp_options) if milp_options \
+        else MILPOptions()
     opts.port_min = port_min or opts.port_min
     if method == "delta-topo":
         opts.fairness = True
@@ -165,3 +169,44 @@ def compare(dag: CommDAG, methods=METHODS[:6], **kw) -> dict[str, PlanResult]:
     problem = DESProblem(dag)
     ideal = _ideal(problem)
     return {m: optimize(dag, m, ideal_result=ideal, **kw) for m in methods}
+
+
+def fleet_optimize(requests, num_pods: int | None = None,
+                   ports_per_pod: int | None = None,
+                   nic_gbps: float = 400.0,
+                   ga_options=None, nct_threshold: float = 1.005,
+                   seed: int = 0):
+    """Multi-tenant entry point (paper Sec. VI): admit every request into a
+    shared-pod fleet, donate port-minimized savings, waterfill the surplus
+    across bottlenecked tenants, and return the FleetPlanner for inspection.
+
+    `requests` is an iterable of `repro.fleet.JobArrival` events or
+    `(name, JobSpec[, kwargs])` tuples.  The fleet defaults to the smallest
+    cluster that can host all requests back to back: the max pod span among
+    requests, with each pod sized for the sum of co-located entitlements.
+
+    Returns `(planner, report)`; `report` is `planner.report()` after all
+    arrivals and surplus passes.
+    """
+    from repro.fleet import FleetPlanner, FleetSpec, arrivals
+
+    events = arrivals(*requests)
+    if not events:
+        raise ValueError("fleet_optimize needs at least one job request")
+
+    if num_pods is None or ports_per_pod is None:
+        spans, per_pod = [], []
+        for ev in events:
+            pl = ev.job.placement()
+            spans.append(pl.num_pods)
+            per_pod.append(max(pl.port_limits()))
+        num_pods = num_pods or max(spans)
+        # stack all co-located entitlements: every request fits, worst case
+        ports_per_pod = ports_per_pod or sum(per_pod)
+
+    planner = FleetPlanner(
+        FleetSpec(num_pods=num_pods, ports_per_pod=ports_per_pod,
+                  nic_gbps=nic_gbps),
+        ga_options=ga_options, nct_threshold=nct_threshold, seed=seed)
+    planner.process(events)
+    return planner, planner.report()

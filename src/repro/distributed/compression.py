@@ -38,7 +38,10 @@ def ring_allreduce_int8(x: jax.Array, axis_name: str
     quantization; `residual` is this device's local quantization error
     (x - dequant(quant(x))) for error feedback.
     """
-    n = jax.lax.axis_size(axis_name)
+    if hasattr(jax.lax, "axis_size"):
+        n = jax.lax.axis_size(axis_name)
+    else:                      # jax < 0.5: psum of a unit weight is static
+        n = jax.lax.psum(1, axis_name)
     me = jax.lax.axis_index(axis_name)
     if n == 1:
         return x, jnp.zeros_like(x)

@@ -1,0 +1,21 @@
+"""Multi-tenant fleet planner: port ledger, admission, surplus reallocation
+and the event-driven replanning loop (paper Sec. VI as a long-lived
+service).  Entry point: `repro.core.api.fleet_optimize` or `FleetPlanner`.
+"""
+from repro.fleet.admission import (AdmissionController, AdmissionError,
+                                   FleetSpec, Tenant)
+from repro.fleet.ledger import LedgerError, PortLedger, TenantAccount
+from repro.fleet.loop import (FleetPlanner, JobArrival, JobDeparture,
+                              TrafficChange, arrivals)
+from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
+from repro.fleet.realloc import (ReallocResult, candidate_boosts,
+                                 port_demand, reallocate, waterfill_grants)
+
+__all__ = [
+    "AdmissionController", "AdmissionError", "FleetSpec", "Tenant",
+    "LedgerError", "PortLedger", "TenantAccount",
+    "FleetPlanner", "JobArrival", "JobDeparture", "TrafficChange",
+    "arrivals", "CachedPlan", "PlanCache", "dag_signature",
+    "ReallocResult", "candidate_boosts", "port_demand", "reallocate",
+    "waterfill_grants",
+]

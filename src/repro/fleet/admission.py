@@ -1,0 +1,216 @@
+"""Admission and placement: JobSpec -> fleet pods -> planned tenant.
+
+Arriving jobs are placed first-fit onto a contiguous window of fleet pods
+whose free (pool) ports cover the job's fair-share entitlement -- one port
+per GPU the job owns in the pod (paper Sec. V-A1).  Co-tenancy is the
+normal case: two jobs share a pod whenever the pod's physical port count
+covers both entitlements (the Fig. 10 Model/Model^T deployment).
+
+Each admitted tenant gets its *local* view of the cluster: a ClusterSpec of
+its pod window with `port_limits = ledger.limits` gathered over the window,
+and a reduced CommDAG built by `repro.core.schedule.build_comm_dag`.
+Planning is DELTA-Fast (+ greedy `trim_ports` for donors) behind the
+fleet-wide PlanCache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cluster import GBPS, ClusterSpec
+from repro.core.dag import CommDAG
+from repro.core.des import DESProblem, simulate
+from repro.core.ga import GAOptions, delta_fast, trim_ports
+from repro.core.schedule import build_comm_dag
+from repro.core.traffic import JobSpec
+from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
+from repro.fleet.plancache import CachedPlan, PlanCache
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """The physical fleet: pods, OCS ports per pod, per-port bandwidth."""
+
+    num_pods: int
+    ports_per_pod: int
+    nic_gbps: float = 400.0
+    intra_pod_bandwidth: float = 900e9
+
+    @property
+    def nic_bandwidth(self) -> float:
+        return self.nic_gbps * GBPS
+
+    def capacity(self) -> np.ndarray:
+        return np.full(self.num_pods, self.ports_per_pod, dtype=np.int64)
+
+
+@dataclass
+class Tenant:
+    """One admitted job: placement, local DAG, and its committed plan."""
+
+    name: str
+    job: JobSpec
+    pods: tuple[int, ...]           # fleet pod ids, local pod i -> pods[i]
+    reverse_stages: bool
+    port_min: bool
+    dag: CommDAG
+    plan: CachedPlan | None = None
+    base_plan: CachedPlan | None = None   # within-entitlement plan; grants
+    _des: object = field(default=None, repr=False)  # restore to this
+    _xbar: object = field(default=None, repr=False)
+
+    @property
+    def num_local_pods(self) -> int:
+        return len(self.pods)
+
+    def local_usage(self) -> np.ndarray:
+        """Per-local-pod ports wired by the committed topology."""
+        if self.plan is None:
+            return np.zeros(self.num_local_pods, dtype=np.int64)
+        return self.plan.x.sum(axis=1).astype(np.int64)
+
+    def fleet_usage(self, num_fleet_pods: int) -> np.ndarray:
+        return scatter(self.local_usage(), self.pods, num_fleet_pods)
+
+    def des(self):
+        """Cached JaxDES for batched candidate evaluation (realloc)."""
+        if self._des is None:
+            from repro.core.des_jax import JaxDES
+            self._des = JaxDES(DESProblem(self.dag))
+        return self._des
+
+    def xbar(self):
+        """Cached Alg. 2 circuit upper bounds (the DAG never changes)."""
+        if self._xbar is None:
+            from repro.core.xbound import x_upper_bound
+            self._xbar = x_upper_bound(self.dag)
+        return self._xbar
+
+
+class AdmissionError(RuntimeError):
+    """No pod window can host the job's entitlement."""
+
+
+class AdmissionController:
+    """Places jobs on fleet pods and plans them through the cache."""
+
+    def __init__(self, fleet: FleetSpec, ledger: PortLedger,
+                 cache: PlanCache | None = None,
+                 ga_options: GAOptions | None = None):
+        self.fleet = fleet
+        self.ledger = ledger
+        # no `or`: an empty PlanCache is falsy (it has __len__)
+        self.cache = cache if cache is not None else PlanCache()
+        self.ga_options = ga_options
+
+    # ------------------------------------------------------------ placement
+    def entitlement(self, job: JobSpec,
+                    reverse_stages: bool = False) -> np.ndarray:
+        """Per-local-pod fair-share ports (== GPUs owned in the pod)."""
+        placement = job.placement(reverse_stages)
+        return np.asarray(placement.port_limits(), dtype=np.int64)
+
+    def find_window(self, job: JobSpec,
+                    reverse_stages: bool = False) -> int:
+        """First-fit base pod for the job's window.
+
+        Checked against `headroom()`, not `pool()`: donated ports stay
+        reserved for their donor (withdrawable on traffic growth) and must
+        never be consumed by a new tenant's permanent entitlement."""
+        ent = self.entitlement(job, reverse_stages)
+        k = len(ent)
+        if k > self.fleet.num_pods:
+            raise AdmissionError(
+                f"job {job.name!r} spans {k} pods, fleet has "
+                f"{self.fleet.num_pods}")
+        head = self.ledger.headroom()
+        for base in range(self.fleet.num_pods - k + 1):
+            if (head[base:base + k] >= ent).all():
+                return base
+        raise AdmissionError(
+            f"no {k}-pod window with {ent.tolist()} free ports "
+            f"(headroom={head.tolist()})")
+
+    # ------------------------------------------------------------ admission
+    def admit(self, name: str, job: JobSpec, *,
+              reverse_stages: bool = False, port_min: bool = False,
+              base_pod: int | None = None) -> Tenant:
+        """Place, ledger-admit, build the local DAG, and plan the tenant."""
+        ent = self.entitlement(job, reverse_stages)
+        base = self.find_window(job, reverse_stages) if base_pod is None \
+            else base_pod
+        pods = tuple(range(base, base + len(ent)))
+        if pods and pods[-1] >= self.fleet.num_pods:
+            raise AdmissionError(f"window {pods} exceeds the fleet")
+        head = self.ledger.headroom()[list(pods)]
+        if (ent > head).any():
+            raise AdmissionError(
+                f"window {pods} has headroom {head.tolist()}, job needs "
+                f"{ent.tolist()} (donated ports stay reserved)")
+        self.ledger.admit(name, scatter(ent, pods, self.fleet.num_pods))
+        try:
+            tenant = self._build_and_plan(name, job, pods, reverse_stages,
+                                          port_min)
+        except Exception:
+            self.ledger.release(name)
+            raise
+        return tenant
+
+    def _build_and_plan(self, name: str, job: JobSpec, pods: tuple[int, ...],
+                        reverse_stages: bool, port_min: bool) -> Tenant:
+        dag = self.build_dag(name, job, pods, reverse_stages)
+        tenant = Tenant(name=name, job=job, pods=pods,
+                        reverse_stages=reverse_stages, port_min=port_min,
+                        dag=dag)
+        self.plan(tenant)
+        return tenant
+
+    def build_dag(self, name: str, job: JobSpec, pods: tuple[int, ...],
+                  reverse_stages: bool) -> CommDAG:
+        limits = gather(self.ledger.limits(name), pods)
+        cluster = ClusterSpec(
+            num_pods=len(pods), port_limits=tuple(int(u) for u in limits),
+            nic_bandwidth=self.fleet.nic_bandwidth,
+            intra_pod_bandwidth=self.fleet.intra_pod_bandwidth)
+        return build_comm_dag(job, reverse_stages=reverse_stages,
+                              cluster=cluster)
+
+    # ------------------------------------------------------------- planning
+    def plan(self, tenant: Tenant) -> CachedPlan:
+        """Port-aware DELTA-Fast solve behind the plan cache; commits the
+        resulting allocation to the ledger."""
+
+        def solve() -> CachedPlan:
+            problem = DESProblem(tenant.dag)
+            ideal = simulate(problem, np.zeros((len(tenant.pods),) * 2),
+                             ideal=True)
+            ga = delta_fast(tenant.dag, self.ga_options)
+            x = ga.x
+            if tenant.port_min and np.isfinite(ga.makespan):
+                x = trim_ports(tenant.dag, x)
+            res = simulate(problem, x)
+            nct = res.comm_time / ideal.comm_time \
+                if ideal.comm_time > 0 else float("inf")
+            return CachedPlan(
+                x=x, makespan=res.makespan, comm_time=res.comm_time,
+                nct=nct, ideal_comm_time=ideal.comm_time,
+                details={"generations": ga.generations,
+                         "evaluations": ga.evaluations,
+                         "port_min": tenant.port_min})
+
+        plan, hit = self.cache.get_or_plan(
+            tenant.dag, solve, extra=("delta-fast", tenant.port_min))
+        plan.details["cache_hit"] = hit
+        tenant.plan = plan
+        tenant.base_plan = plan.copy()
+        self.ledger.commit(tenant.name,
+                           tenant.fleet_usage(self.fleet.num_pods))
+        return plan
+
+    # ------------------------------------------------------------ departure
+    def depart(self, tenant: Tenant) -> None:
+        try:
+            self.ledger.release(tenant.name)
+        except LedgerError:   # already released (defensive)
+            pass

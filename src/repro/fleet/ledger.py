@@ -1,0 +1,233 @@
+"""Double-entry OCS port ledger for multi-tenant pods (paper Sec. VI).
+
+Every fleet pod owns a fixed number of physical OCS ports.  A tenant admitted
+onto a pod span holds, per pod:
+
+  entitled   fair-share ports (== its GPUs in the pod, paper Sec. V-A1)
+  donated    entitled ports the tenant has returned to the shared pool
+             (port-minimized plans free these, Fig. 9/10)
+  granted    surplus ports received from the pool on top of its entitlement
+  allocated  ports wired into the tenant's currently committed topology
+
+`limits = entitled - donated + granted` is the port budget the planner may
+use (the `ClusterSpec.port_limits` of the tenant's local view), and
+
+      sum_t limits_t  +  pool  ==  capacity          (per pod, exactly)
+
+is the conservation equation `check()` enforces: ports never appear or
+vanish, they only move between tenants and the pool.  Per tenant,
+`allocated + surplus == limits` with `surplus >= 0`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+class LedgerError(RuntimeError):
+    """An operation would violate port conservation."""
+
+
+@dataclass
+class TenantAccount:
+    """Per-tenant port books, all arrays indexed by *fleet* pod id."""
+
+    name: str
+    entitled: np.ndarray
+    donated: np.ndarray = field(default=None)  # type: ignore[assignment]
+    granted: np.ndarray = field(default=None)  # type: ignore[assignment]
+    allocated: np.ndarray = field(default=None)  # type: ignore[assignment]
+
+    def __post_init__(self) -> None:
+        self.entitled = np.asarray(self.entitled, dtype=np.int64)
+        zeros = np.zeros_like(self.entitled)
+        for f in ("donated", "granted", "allocated"):
+            if getattr(self, f) is None:
+                setattr(self, f, zeros.copy())
+
+    @property
+    def limits(self) -> np.ndarray:
+        return self.entitled - self.donated + self.granted
+
+    @property
+    def surplus(self) -> np.ndarray:
+        return self.limits - self.allocated
+
+
+class PortLedger:
+    """Tracks per-pod port capacity, per-tenant allocations and surplus."""
+
+    def __init__(self, capacity: Sequence[int]):
+        self.capacity = np.asarray(capacity, dtype=np.int64)
+        if (self.capacity < 0).any():
+            raise LedgerError("negative pod capacity")
+        self.num_pods = len(self.capacity)
+        self.accounts: dict[str, TenantAccount] = {}
+
+    # ------------------------------------------------------------- queries
+    def __contains__(self, name: str) -> bool:
+        return name in self.accounts
+
+    def account(self, name: str) -> TenantAccount:
+        try:
+            return self.accounts[name]
+        except KeyError:
+            raise LedgerError(f"unknown tenant {name!r}") from None
+
+    def limits(self, name: str) -> np.ndarray:
+        return self.account(name).limits
+
+    def surplus(self, name: str) -> np.ndarray:
+        return self.account(name).surplus
+
+    def pool(self) -> np.ndarray:
+        """Per-pod ports owned by no tenant (grantable)."""
+        total = sum((a.limits for a in self.accounts.values()),
+                    np.zeros_like(self.capacity))
+        return self.capacity - total
+
+    def headroom(self) -> np.ndarray:
+        """Per-pod ports free for *new entitlements*: donated ports stay
+        reserved for their donor (withdrawable), so admission only sees
+        capacity minus everything entitled or granted."""
+        total = sum((a.entitled + a.granted for a in self.accounts.values()),
+                    np.zeros_like(self.capacity))
+        return self.capacity - total
+
+    # ---------------------------------------------------------- lifecycle
+    def admit(self, name: str, entitled: Sequence[int]) -> TenantAccount:
+        if name in self.accounts:
+            raise LedgerError(f"tenant {name!r} already admitted")
+        ent = np.asarray(entitled, dtype=np.int64)
+        if ent.shape != self.capacity.shape or (ent < 0).any():
+            raise LedgerError(f"bad entitlement shape/sign for {name!r}")
+        if (ent > self.pool()).any():
+            raise LedgerError(
+                f"admitting {name!r} needs {ent.tolist()} ports but the "
+                f"pool has {self.pool().tolist()}")
+        acct = TenantAccount(name=name, entitled=ent)
+        self.accounts[name] = acct
+        return acct
+
+    def release(self, name: str) -> TenantAccount:
+        """Remove a tenant; its limits return to the pool implicitly."""
+        return self.accounts.pop(self.account(name).name)
+
+    # ------------------------------------------------------------ postings
+    def commit(self, name: str, allocated: Sequence[int]) -> None:
+        """Record the ports wired by the tenant's committed topology."""
+        acct = self.account(name)
+        alloc = np.asarray(allocated, dtype=np.int64)
+        if alloc.shape != self.capacity.shape or (alloc < 0).any():
+            raise LedgerError(f"bad allocation shape/sign for {name!r}")
+        if (alloc > acct.limits).any():
+            raise LedgerError(
+                f"{name!r} would wire {alloc.tolist()} ports with limits "
+                f"{acct.limits.tolist()}")
+        acct.allocated = alloc
+
+    def donate(self, name: str, amount: Sequence[int] | None = None
+               ) -> np.ndarray:
+        """Move (part of) a tenant's surplus entitlement into the pool."""
+        acct = self.account(name)
+        amt = acct.surplus.copy() if amount is None \
+            else np.asarray(amount, dtype=np.int64)
+        # donations come from the entitlement, never from received grants
+        amt = np.minimum(amt, acct.entitled - acct.donated - np.maximum(
+            acct.allocated - acct.granted, 0))
+        amt = np.maximum(amt, 0)
+        if (amt > acct.surplus).any():
+            raise LedgerError(f"{name!r} cannot donate more than surplus")
+        acct.donated += amt
+        return amt
+
+    def withdraw_donation(self, name: str,
+                          amount: Sequence[int] | None = None) -> np.ndarray:
+        """Take donated ports back (traffic grew); limited by the pool."""
+        acct = self.account(name)
+        want = acct.donated.copy() if amount is None \
+            else np.asarray(amount, dtype=np.int64)
+        amt = np.minimum(np.minimum(want, acct.donated),
+                         np.maximum(self.pool(), 0))
+        acct.donated -= amt
+        return amt
+
+    def grant(self, name: str, amount: Sequence[int]) -> None:
+        """Grant pool ports to a (bottlenecked) tenant."""
+        acct = self.account(name)
+        amt = np.asarray(amount, dtype=np.int64)
+        if (amt < 0).any():
+            raise LedgerError("negative grant")
+        if (amt > self.pool()).any():
+            raise LedgerError(
+                f"granting {amt.tolist()} to {name!r} exceeds pool "
+                f"{self.pool().tolist()}")
+        acct.granted += amt
+
+    def reclaim(self, name: str, amount: Sequence[int] | None = None
+                ) -> np.ndarray:
+        """Return (part of) a tenant's grants to the pool."""
+        acct = self.account(name)
+        amt = acct.granted.copy() if amount is None \
+            else np.minimum(np.asarray(amount, dtype=np.int64), acct.granted)
+        if (amt < 0).any():
+            raise LedgerError("negative reclaim")
+        if (acct.allocated > acct.limits - amt).any():
+            raise LedgerError(
+                f"reclaiming {amt.tolist()} from {name!r} would strand its "
+                f"committed allocation; commit a smaller plan first")
+        acct.granted -= amt
+        return amt
+
+    # ---------------------------------------------------------- invariants
+    def check(self) -> None:
+        """Raise LedgerError unless port conservation holds exactly."""
+        total = np.zeros_like(self.capacity)
+        for acct in self.accounts.values():
+            for f in ("entitled", "donated", "granted", "allocated"):
+                if (getattr(acct, f) < 0).any():
+                    raise LedgerError(f"{acct.name!r}.{f} went negative")
+            if (acct.donated > acct.entitled).any():
+                raise LedgerError(f"{acct.name!r} donated beyond entitlement")
+            if (acct.allocated > acct.limits).any():
+                raise LedgerError(f"{acct.name!r} allocated beyond limits")
+            if (acct.allocated + acct.surplus != acct.limits).any():
+                raise LedgerError(f"{acct.name!r} books don't balance")
+            total += acct.limits
+        pool = self.capacity - total
+        if (pool < 0).any():
+            raise LedgerError(
+                f"pool went negative: {pool.tolist()} (capacity "
+                f"{self.capacity.tolist()})")
+        if (total + pool != self.capacity).any():  # pragma: no cover
+            raise LedgerError("conservation equation violated")
+
+    def snapshot(self) -> dict:
+        """JSON-friendly state dump (benchmarks / debugging)."""
+        return {
+            "capacity": self.capacity.tolist(),
+            "pool": self.pool().tolist(),
+            "tenants": {
+                n: {"entitled": a.entitled.tolist(),
+                    "donated": a.donated.tolist(),
+                    "granted": a.granted.tolist(),
+                    "allocated": a.allocated.tolist(),
+                    "surplus": a.surplus.tolist()}
+                for n, a in self.accounts.items()},
+        }
+
+
+def scatter(local: Sequence[int], pods: Iterable[int],
+            num_pods: int) -> np.ndarray:
+    """Expand a tenant-local per-pod vector onto fleet pod ids."""
+    out = np.zeros(num_pods, dtype=np.int64)
+    for value, pod in zip(local, pods):
+        out[pod] = int(value)
+    return out
+
+
+def gather(fleet_vec: np.ndarray, pods: Iterable[int]) -> np.ndarray:
+    """Restrict a fleet per-pod vector to a tenant's local pod order."""
+    return np.asarray([int(fleet_vec[p]) for p in pods], dtype=np.int64)

@@ -1,0 +1,270 @@
+"""Event-driven fleet replanning loop.
+
+The planner is a long-lived service consuming a stream of events:
+
+  JobArrival     admit + place the job, plan its topology (cache-aware),
+                 optionally donate the port savings of a port-minimized plan
+  JobDeparture   release the tenant; its ports return to the pool
+  TrafficChange  swap the tenant's JobSpec (same footprint), replan
+
+After every event the loop runs a surplus pass: the grantable pool is
+waterfilled across bandwidth-bottlenecked tenants (NCT above threshold) and
+each boosted tenant is re-optimized with one batched `JaxDES` evaluation
+(`repro.fleet.realloc`).  The `PortLedger` conservation invariant is
+checked after every event.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.ga import GAOptions
+from repro.core.traffic import JobSpec
+from repro.fleet.admission import (AdmissionController, AdmissionError,
+                                   FleetSpec, Tenant)
+from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
+from repro.fleet.plancache import PlanCache
+from repro.fleet.realloc import port_demand, reallocate, waterfill_grants
+
+
+# ------------------------------------------------------------------- events
+@dataclass(frozen=True)
+class JobArrival:
+    name: str
+    job: JobSpec
+    reverse_stages: bool = False
+    port_min: bool = False
+    donate_surplus: bool | None = None   # default: == port_min
+    base_pod: int | None = None
+
+
+@dataclass(frozen=True)
+class JobDeparture:
+    name: str
+
+
+@dataclass(frozen=True)
+class TrafficChange:
+    """Replace a tenant's JobSpec in place (same placement footprint)."""
+    name: str
+    job: JobSpec
+
+
+FleetEvent = JobArrival | JobDeparture | TrafficChange
+
+
+# ------------------------------------------------------------------ planner
+class FleetPlanner:
+    """Cluster-wide multi-tenant port manager (paper Sec. VI as a service)."""
+
+    def __init__(self, fleet: FleetSpec,
+                 ga_options: GAOptions | None = None,
+                 cache: PlanCache | None = None,
+                 nct_threshold: float = 1.005,
+                 donors_can_receive: bool = False,
+                 auto_realloc: bool = True,
+                 num_random_candidates: int = 8,
+                 seed: int = 0):
+        self.fleet = fleet
+        self.ledger = PortLedger(fleet.capacity())
+        self.cache = cache if cache is not None else PlanCache()
+        self.admission = AdmissionController(fleet, self.ledger, self.cache,
+                                             ga_options)
+        self.tenants: dict[str, Tenant] = {}
+        self.nct_threshold = nct_threshold
+        self.donors_can_receive = donors_can_receive
+        self.auto_realloc = auto_realloc
+        self.num_random_candidates = num_random_candidates
+        self.rng = np.random.default_rng(seed)
+        self.realloc_batches = 0        # batched JaxDES calls issued
+        self.realloc_candidates = 0     # topologies evaluated inside them
+        self.history: list[dict] = []
+
+    # -------------------------------------------------------------- events
+    def handle(self, event: FleetEvent) -> dict:
+        # surplus grants are revocable leases: take them all back (restoring
+        # each tenant's cached within-entitlement plan) before mutating the
+        # fleet, then let the end-of-event surplus pass redistribute from
+        # scratch over the new tenant mix
+        self.revoke_grants()
+        try:
+            if isinstance(event, JobArrival):
+                record = self._on_arrival(event)
+            elif isinstance(event, JobDeparture):
+                record = self._on_departure(event)
+            elif isinstance(event, TrafficChange):
+                record = self._on_traffic_change(event)
+            else:
+                raise TypeError(f"unknown fleet event {event!r}")
+        except Exception:
+            # the event failed after grants were revoked: re-run the surplus
+            # pass so running tenants get their boosts back, then propagate
+            if self.auto_realloc:
+                self.replan_surplus()
+            raise
+        if self.auto_realloc:
+            record["realloc"] = self.replan_surplus()
+        self.ledger.check()
+        self.history.append(record)
+        return record
+
+    def process(self, events) -> list[dict]:
+        return [self.handle(e) for e in events]
+
+    # ------------------------------------------------------------- arrival
+    def _on_arrival(self, ev: JobArrival) -> dict:
+        if ev.name in self.tenants:
+            raise AdmissionError(f"tenant {ev.name!r} already admitted")
+        tenant = self.admission.admit(
+            ev.name, ev.job, reverse_stages=ev.reverse_stages,
+            port_min=ev.port_min, base_pod=ev.base_pod)
+        self.tenants[ev.name] = tenant
+        donate = ev.port_min if ev.donate_surplus is None \
+            else ev.donate_surplus
+        donated = self.ledger.donate(ev.name) if donate \
+            else np.zeros(self.fleet.num_pods, dtype=np.int64)
+        plan = tenant.plan
+        return {"event": "arrival", "tenant": ev.name,
+                "pods": list(tenant.pods),
+                "cache_hit": bool(plan.details.get("cache_hit")),
+                "nct": plan.nct, "ports": int(plan.x.sum()),
+                "donated_ports": int(donated.sum())}
+
+    # ----------------------------------------------------------- departure
+    def _on_departure(self, ev: JobDeparture) -> dict:
+        tenant = self.tenants.pop(ev.name, None)
+        if tenant is None:
+            raise LedgerError(f"unknown tenant {ev.name!r}")
+        self.admission.depart(tenant)
+        return {"event": "departure", "tenant": ev.name,
+                "pods": list(tenant.pods)}
+
+    # ------------------------------------------------------ traffic change
+    def _on_traffic_change(self, ev: TrafficChange) -> dict:
+        tenant = self.tenants.get(ev.name)
+        if tenant is None:
+            raise LedgerError(f"unknown tenant {ev.name!r}")
+        old_ent = self.admission.entitlement(tenant.job,
+                                             tenant.reverse_stages)
+        new_ent = self.admission.entitlement(ev.job, tenant.reverse_stages)
+        if not np.array_equal(old_ent, new_ent):
+            raise AdmissionError(
+                f"traffic change for {ev.name!r} alters the placement "
+                f"footprint; depart + re-arrive instead")
+        # grants were already revoked in handle(); take donations back too
+        self.ledger.withdraw_donation(ev.name)
+        nct_before = tenant.plan.nct if tenant.plan else float("inf")
+        new_tenant = Tenant(
+            name=ev.name, job=ev.job, pods=tenant.pods,
+            reverse_stages=tenant.reverse_stages, port_min=tenant.port_min,
+            dag=self.admission.build_dag(ev.name, ev.job, tenant.pods,
+                                         tenant.reverse_stages))
+        self.admission.plan(new_tenant)
+        self.tenants[ev.name] = new_tenant
+        donated = self.ledger.donate(ev.name) if tenant.port_min \
+            else np.zeros(self.fleet.num_pods, dtype=np.int64)
+        return {"event": "traffic_change", "tenant": ev.name,
+                "nct_before": nct_before, "nct": new_tenant.plan.nct,
+                "cache_hit": bool(new_tenant.plan.details.get("cache_hit")),
+                "donated_ports": int(donated.sum())}
+
+    # -------------------------------------------------------- surplus pass
+    def revoke_grants(self) -> int:
+        """Take back every outstanding grant, restoring base plans."""
+        revoked = 0
+        for tenant in self.tenants.values():
+            acct = self.ledger.account(tenant.name)
+            if acct.granted.sum() == 0:
+                continue
+            if tenant.base_plan is not None:
+                tenant.plan = tenant.base_plan.copy()
+            self.ledger.commit(tenant.name,
+                               tenant.fleet_usage(self.fleet.num_pods))
+            revoked += int(self.ledger.reclaim(tenant.name).sum())
+        return revoked
+
+    def bottlenecked(self) -> list[Tenant]:
+        """Tenants whose comm time exceeds the non-blocking ideal by more
+        than the threshold.  Port-minimized donors opted into minimal ports
+        (their savings belong to co-tenants, Fig. 10) and are excluded
+        unless `donors_can_receive` is set."""
+        return [t for t in self.tenants.values()
+                if t.plan is not None and np.isfinite(t.plan.nct)
+                and t.plan.nct > self.nct_threshold
+                and (self.donors_can_receive or not t.port_min)]
+
+    def replan_surplus(self) -> list[dict]:
+        """Waterfill the pool across bottlenecked tenants, re-optimize each
+        boosted tenant with one batched DES evaluation."""
+        pool = self.ledger.pool()
+        needy = self.bottlenecked()
+        if pool.sum() <= 0 or not needy:
+            return []
+        demands = np.stack([
+            scatter(port_demand(t.dag, t.plan.x, xbar=t.xbar()), t.pods,
+                    self.fleet.num_pods) for t in needy])
+        grants = waterfill_grants(demands, pool)
+        outcomes: list[dict] = []
+        for tenant, g in zip(needy, grants):
+            if g.sum() <= 0:
+                continue
+            self.ledger.grant(tenant.name, g)
+            boosted = gather(self.ledger.limits(tenant.name), tenant.pods)
+            res = reallocate(
+                tenant.dag, tenant.plan.x, boosted,
+                tenant.plan.ideal_comm_time, des=tenant.des(), rng=self.rng,
+                num_random=self.num_random_candidates,
+                base_makespan=tenant.plan.makespan,
+                base_comm_time=tenant.plan.comm_time)
+            self.realloc_batches += res.batch_calls
+            self.realloc_candidates += res.num_candidates
+            nct_before = tenant.plan.nct
+            if res.improved:
+                tenant.plan.x = res.x
+                tenant.plan.makespan = res.makespan
+                tenant.plan.comm_time = res.comm_time
+                tenant.plan.nct = res.nct
+                self.ledger.commit(tenant.name,
+                                   tenant.fleet_usage(self.fleet.num_pods))
+            # hand unused grant back to the pool either way
+            acct = self.ledger.account(tenant.name)
+            returned = self.ledger.reclaim(
+                tenant.name, np.minimum(acct.granted, acct.surplus))
+            outcomes.append({
+                "tenant": tenant.name, "granted": int(g.sum()),
+                "kept": int(g.sum() - returned.sum()),
+                "nct_before": nct_before, "nct_after": tenant.plan.nct,
+                "improved": res.improved,
+                "candidates": res.num_candidates})
+        return outcomes
+
+    # ------------------------------------------------------------- reports
+    def report(self) -> dict:
+        return {
+            "tenants": {
+                name: {"pods": list(t.pods), "nct": t.plan.nct,
+                       "makespan": t.plan.makespan,
+                       "ports": int(t.plan.x.sum()),
+                       "reverse_stages": t.reverse_stages,
+                       "port_min": t.port_min}
+                for name, t in self.tenants.items() if t.plan is not None},
+            "ledger": self.ledger.snapshot(),
+            "cache": self.cache.stats(),
+            "realloc": {"batches": self.realloc_batches,
+                        "candidates": self.realloc_candidates},
+        }
+
+
+def arrivals(*specs) -> list[JobArrival]:
+    """Convenience: (name, job[, kwargs]) tuples -> JobArrival events.
+    JobArrival instances pass through unchanged."""
+    events = []
+    for spec in specs:
+        if isinstance(spec, JobArrival):
+            events.append(spec)
+            continue
+        name, job = spec[0], spec[1]
+        kw = dict(spec[2]) if len(spec) > 2 else {}
+        events.append(JobArrival(name=name, job=job, **kw))
+    return events

@@ -213,6 +213,8 @@ def run_cell(arch_name: str, arch: ArchSpec, shape: ShapeSpec,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax < 0.5 returns [dict]
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     cost = hloanalysis.analyze(txt)   # trip-count-aware per-device totals
     cell.update(

@@ -10,12 +10,19 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(num_axes: int) -> dict:
+    """`axis_types` only exists on newer jax; older versions are implicitly
+    Auto everywhere, so omitting it is semantically identical."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * num_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
@@ -23,6 +30,5 @@ def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     n = jax.device_count()
     mp = max(1, min(model_parallel, n))
     dp = n // mp
-    return jax.make_mesh(
-        (dp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((dp, mp), ("data", "model"),
+                         **_axis_type_kwargs(2))

@@ -1,0 +1,104 @@
+"""Deterministic stand-in for the small `hypothesis` API surface used by
+this suite (`given`, `settings`, `strategies.integers`,
+`strategies.composite`).
+
+The container image does not ship `hypothesis`; rather than skip every
+property test we replay each one over a fixed, seeded stream of examples.
+This keeps the invariants exercised (and failures reproducible) at the cost
+of hypothesis' adaptive shrinking.  When the real package is installed the
+stub is never imported (see conftest.py).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A value generator: `sample(rng) -> value`."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def composite(fn):
+    """`@st.composite` -- fn(draw, *args) becomes a Strategy factory."""
+
+    @functools.wraps(fn)
+    def make(*args, **kwargs) -> Strategy:
+        def sample(rng: random.Random):
+            return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+
+        return Strategy(sample)
+
+    return make
+
+
+def given(*strategies: Strategy):
+    """Drawn values fill the *rightmost* parameters of the test (hypothesis
+    semantics); the leading parameters stay visible to pytest as fixtures."""
+
+    def deco(test):
+        params = list(inspect.signature(test).parameters.values())
+        fixture_params = params[:len(params) - len(strategies)]
+
+        @functools.wraps(test)
+        def runner(*args, **kwargs):
+            lead = list(args) + [kwargs.pop(p.name) for p in
+                                 fixture_params[len(args):]]
+            n = getattr(runner, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(0xDE17A + 7919 * i)
+                vals = [s.sample(rng) for s in strategies]
+                try:
+                    test(*lead, *vals, **kwargs)
+                except BaseException:
+                    print(f"[hypothesis stub] falsifying example #{i}: "
+                          f"{vals!r}", file=sys.stderr)
+                    raise
+
+        # pytest must only see (and inject) the fixture parameters
+        runner.__signature__ = inspect.Signature(fixture_params)
+        runner.hypothesis_stub = True
+        return runner
+
+    return deco
+
+
+def settings(**kwargs):
+    """Only `max_examples` is honoured; the rest (deadline, ...) is noise
+    for the stub's fixed replay loop."""
+
+    def deco(fn):
+        fn._stub_max_examples = kwargs.get("max_examples",
+                                           DEFAULT_MAX_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register the stub as `hypothesis` / `hypothesis.strategies`."""
+    h = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.Strategy = Strategy
+    st.integers = integers
+    st.composite = composite
+    h.given = given
+    h.settings = settings
+    h.strategies = st
+    h.__stub__ = True
+    sys.modules["hypothesis"] = h
+    sys.modules["hypothesis.strategies"] = st

@@ -42,8 +42,8 @@ _SUBPROC = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro.distributed.compression import ring_allreduce_int8
 
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # no axis_types: implicit Auto on old jax, explicit default on new
+    mesh = jax.make_mesh((4,), ("data",))
     rng = np.random.default_rng(0)
     x = rng.standard_normal((4, 1000)).astype(np.float32)
 
@@ -53,8 +53,12 @@ _SUBPROC = textwrap.dedent("""
         exact = jax.lax.psum(v, "data")
         return total[None], res[None], exact[None]
 
-    fn = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("data"),
-                               out_specs=P("data")))
+    try:
+        shard_map = jax.shard_map
+    except AttributeError:               # jax < 0.5: experimental namespace
+        from jax.experimental.shard_map import shard_map
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data")))
     total, res, exact = fn(jnp.asarray(x))
     total, res, exact = map(np.asarray, (total, res, exact))
     scale = np.abs(x).max() * 4 / 127

@@ -27,8 +27,7 @@ def test_hlo_analyzer_counts_scan_trips():
             y, _ = jax.lax.scan(body, x, None, length=7)
             return y.sum()
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
         c = jax.jit(f, in_shardings=(NamedSharding(mesh, P("data", None)),
                                      NamedSharding(mesh, P(None, "model")))
                     ).lower(jax.ShapeDtypeStruct((16, 64), jnp.float32),

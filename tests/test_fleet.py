@@ -1,0 +1,200 @@
+"""Fleet planner: ledger conservation, surplus reallocation, plan cache,
+and the multi-tenant admission/departure loop."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import gpt7b_job
+from repro.core.api import fleet_optimize, optimize
+from repro.core.baselines import BASELINES
+from repro.core.des import DESProblem, simulate
+from repro.core.ga import GAOptions
+from repro.core.milp import MILPOptions
+from repro.core.schedule import build_comm_dag
+from repro.fleet import (FleetPlanner, FleetSpec, JobArrival, JobDeparture,
+                         LedgerError, PortLedger, TrafficChange,
+                         dag_signature, reallocate, waterfill_grants)
+
+GA = GAOptions(pop_size=12, max_generations=25, patience=8, time_limit=5.0,
+               seed=0)
+
+
+def make_planner(pods=4, ports=8, **kw) -> FleetPlanner:
+    return FleetPlanner(FleetSpec(num_pods=pods, ports_per_pod=ports,
+                                  nic_gbps=100.0), ga_options=GA, seed=0,
+                        **kw)
+
+
+def assert_books_balance(planner: FleetPlanner) -> None:
+    planner.ledger.check()
+    for name in planner.tenants:
+        acct = planner.ledger.account(name)
+        assert (acct.allocated + acct.surplus == acct.limits).all()
+
+
+# ------------------------------------------------------------------- ledger
+def test_ledger_conservation_and_errors():
+    led = PortLedger([4, 4, 4])
+    led.admit("a", [2, 2, 0])
+    led.admit("b", [2, 2, 2])
+    with pytest.raises(LedgerError):           # pod 0/1 are full
+        led.admit("c", [1, 0, 0])
+    led.commit("a", [1, 2, 0])
+    led.check()
+    a = led.account("a")
+    assert (a.allocated + a.surplus == a.limits).all()
+    assert (led.pool() == [0, 0, 2]).all()
+
+    donated = led.donate("a")                  # a frees its unused port
+    assert donated.tolist() == [1, 0, 0]
+    assert (led.pool() == [1, 0, 2]).all()
+    led.check()
+
+    led.grant("b", [1, 0, 1])                  # b picks up pool ports
+    assert (led.limits("b") == [3, 2, 3]).all()
+    with pytest.raises(LedgerError):
+        led.grant("b", [1, 0, 0])              # pool at pod 0 is empty now
+    led.commit("b", [3, 2, 2])
+    led.check()
+    with pytest.raises(LedgerError):           # beyond limits
+        led.commit("b", [4, 2, 2])
+
+    # withdraw capped by what is still in the pool
+    got = led.withdraw_donation("a")
+    assert got.tolist() == [0, 0, 0]           # pod-0 pool consumed by grant
+    led.reclaim("b", [0, 0, 1])
+    led.check()
+    led.release("b")
+    assert (led.pool() == led.capacity - led.limits("a")).all()
+    led.check()
+
+
+def test_waterfill_grants_maxmin():
+    demands = np.array([[2, 0], [2, 4]])
+    supply = np.array([3, 2])
+    g = waterfill_grants(demands, supply)
+    assert (g <= demands).all() and (g >= 0).all()
+    assert (g.sum(axis=0) <= supply).all()
+    assert g.sum(axis=0)[0] == 3               # pod 0 fully used
+    assert g.sum(axis=0)[1] == 2               # pod 1 fully used by tenant 1
+    assert {g[0, 0], g[1, 0]} == {1, 2}        # max-min split of pod 0
+    # kernel and numpy paths agree
+    g2 = waterfill_grants(demands, supply, use_kernel=False)
+    assert (g == g2).all()
+    # degenerate shapes
+    assert waterfill_grants(np.zeros((0, 2)), supply).shape == (0, 2)
+    assert waterfill_grants(demands, np.zeros(2)).sum() == 0
+
+
+# ------------------------------------------------------------- reallocation
+def test_reallocate_never_worsens_and_respects_limits():
+    dag = build_comm_dag(gpt7b_job(3), 100.0)
+    x0 = BASELINES["prop-alloc"](dag)
+    problem = DESProblem(dag)
+    base = simulate(problem, x0)
+    ideal = simulate(problem, np.zeros_like(x0, dtype=float), ideal=True)
+    boosted = np.asarray(dag.cluster.port_limits) + 2
+    res = reallocate(dag, x0, boosted, ideal.comm_time,
+                     rng=np.random.default_rng(0))
+    assert res.num_candidates >= 2             # real portfolio, one batch
+    assert res.batch_calls == 1
+    assert res.comm_time <= base.comm_time * (1 + 1e-9)
+    assert res.nct <= base.comm_time / ideal.comm_time * (1 + 1e-9)
+    assert (res.x.sum(axis=1) <= boosted).all()
+    assert (res.x == res.x.T).all()
+
+
+# --------------------------------------------------------------- plan cache
+def test_plan_cache_hit_miss():
+    job = gpt7b_job(2)
+    planner = make_planner(pods=8, ports=4)    # two disjoint 4-pod windows
+    r1 = planner.handle(JobArrival("a", job))
+    r2 = planner.handle(JobArrival("b", job))  # same workload, other window
+    assert r1["cache_hit"] is False and r2["cache_hit"] is True
+    assert r1["pods"] != r2["pods"]
+    assert planner.cache.stats()["hits"] == 1
+    assert planner.cache.stats()["misses"] == 1
+    # same topology planned for both (copied, not shared)
+    ta, tb = planner.tenants["a"], planner.tenants["b"]
+    assert (ta.plan.x == tb.plan.x).all()
+    assert ta.plan.x is not tb.plan.x
+
+    planner2 = make_planner(pods=4, ports=8)
+    m1 = planner2.handle(JobArrival("fwd", job))
+    m2 = planner2.handle(JobArrival("rev", job, reverse_stages=True))
+    assert m1["cache_hit"] is False
+    assert m2["cache_hit"] is False            # reversed DAG != forward DAG
+
+
+def test_dag_signature_stability():
+    dag1 = build_comm_dag(gpt7b_job(2), 100.0)
+    dag2 = build_comm_dag(gpt7b_job(2), 100.0)
+    assert dag_signature(dag1) == dag_signature(dag2)
+    boosted = dag1.cluster.with_port_limits(
+        tuple(u + 1 for u in dag1.cluster.port_limits))
+    dag3 = build_comm_dag(gpt7b_job(2), 100.0, cluster=boosted)
+    assert dag_signature(dag1) != dag_signature(dag3)
+    assert dag_signature(dag1, extra=("a",)) != dag_signature(dag1)
+
+
+# ------------------------------------------------------- fig. 10 end-to-end
+def test_two_tenant_surplus_realloc():
+    """Donor (port-minimized) + reversed co-tenant on shared pods: the
+    co-tenant's NCT never worsens and all candidate evaluation is batched."""
+    job = gpt7b_job(4)
+    planner, report = fleet_optimize(
+        [("model", job, {"port_min": True}),
+         ("model_t", job, {"reverse_stages": True})],
+        ports_per_pod=8, nic_gbps=100.0, ga_options=GA)
+    assert set(report["tenants"]) == {"model", "model_t"}
+    cot = planner.tenants["model_t"]
+    nct_before = cot.base_plan.nct
+    nct_after = cot.plan.nct
+    assert nct_after <= nct_before * (1 + 1e-9)
+    # candidate evaluation went through batched JaxDES calls: every batch
+    # scored a whole portfolio, never one candidate at a time
+    assert planner.realloc_batches >= 1
+    assert planner.realloc_candidates >= 2 * planner.realloc_batches
+    assert_books_balance(planner)
+
+
+# ------------------------------------------- admission/departure sequencing
+def test_three_tenant_admission_departure_sequence():
+    job = gpt7b_job(2)
+    planner = make_planner(pods=4, ports=12)   # room for three tenants
+    records = planner.process([
+        JobArrival("donor", job, port_min=True),
+        JobArrival("needy", job, reverse_stages=True),
+        JobArrival("third", job),
+    ])
+    assert [r["event"] for r in records] == ["arrival"] * 3
+    assert_books_balance(planner)
+    for t in planner.tenants.values():         # grants never hurt anyone
+        assert t.plan.nct <= t.base_plan.nct * (1 + 1e-9)
+
+    # traffic change keeps the footprint, replans, books still balance
+    planner.handle(TrafficChange("needy", gpt7b_job(3)))
+    assert planner.tenants["needy"].job.num_microbatches == 3
+    assert_books_balance(planner)
+
+    entitled_before = sum(a.entitled.sum() for a in
+                          planner.ledger.accounts.values())
+    planner.handle(JobDeparture("donor"))
+    assert "donor" not in planner.tenants
+    assert_books_balance(planner)
+    entitled_after = sum(a.entitled.sum() for a in
+                        planner.ledger.accounts.values())
+    assert entitled_after == entitled_before - 16   # 4 pods x 4 ports freed
+
+    with pytest.raises(LedgerError):
+        planner.handle(JobDeparture("donor"))  # double departure
+
+
+# ------------------------------------------------------------ satellite fix
+def test_optimize_does_not_mutate_caller_options(tiny_dag):
+    opts = MILPOptions(time_limit=20.0, mip_rel_gap=0.05)
+    optimize(tiny_dag, "delta-topo", port_min=True, milp_options=opts)
+    assert opts.fairness is False              # would be True before the fix
+    assert opts.port_min is False              # would be True before the fix
+    assert opts.time_limit == 20.0

