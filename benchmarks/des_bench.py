@@ -41,4 +41,15 @@ def run(full: bool = False) -> list[Row]:
              for i in range(4) if feas[i])
     rows.append(Row(f"des/jax_vmap32/{w}", us_jax,
                     f"speedup_vs_numpy={us_np/us_jax:.1f}x;match={ok}"))
+
+    # fused genome->topology scatter + vmap DES (the GA generation step)
+    G = np.stack([space.genome_of(x) for x in xs])
+    jd.batch_genome_makespan(G, space.edge_u, space.edge_v)  # compile
+    t0 = time.time()
+    ms_g, feas_g = jd.batch_genome_makespan(G, space.edge_u, space.edge_v)
+    us_gen = (time.time() - t0) / len(G) * 1e6
+    agree = bool((feas_g == feas).all()) and bool(
+        np.allclose(ms_g[feas_g], ms[feas], rtol=1e-6))
+    rows.append(Row(f"des/jax_genome32/{w}", us_gen,
+                    f"speedup_vs_numpy={us_np/us_gen:.1f}x;match={agree}"))
     return rows

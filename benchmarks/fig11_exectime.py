@@ -32,7 +32,8 @@ def run(full: bool = False) -> list[Row]:
                                           hot_start=False)),
                 ("delta-joint-hotstart",
                  milp_opts(full, fairness=False, hot_start=True,
-                           upper_bound=ga.makespan * (1 + 1e-9)))):
+                           upper_bound=ga.makespan * (1 + 1e-9),
+                           seed_x=ga.x))):
             t0 = time.time()
             res = solve_delta_milp(dag, opts)
             dt = time.time() - t0

@@ -1,0 +1,88 @@
+"""GA engine throughput: the population-array-resident DELTA-Fast hot loop
+vs the legacy per-genome implementation, at identical seed and generation
+budget, plus batched vs serial `trim_ports`.
+
+Emits the measured speedup and the relative makespan delta (the acceptance
+bar: >= 3x wall clock at unchanged-or-better makespan on the medium
+workload, identical trim_ports port count and makespan).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, bench_dag, save_json
+from repro.core import _ga_legacy as legacy
+from repro.core.des import DESProblem, simulate
+from repro.core.ga import GAOptions, TopologySpace, delta_fast, trim_ports
+
+WORKLOAD = "megatron-177b"      # medium: 24 pods, 5 active pairs
+
+
+def _opts(gens: int) -> dict:
+    return dict(seed=0, max_generations=gens, patience=10**9,
+                time_limit=1e9)
+
+
+def run(full: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    mb = 16 if full else 8
+    gens = 30 if full else (6 if smoke else 12)
+    dag = bench_dag(WORKLOAD, full=False, mb=mb)
+
+    t0 = time.time()
+    new = delta_fast(dag, GAOptions(**_opts(gens)))
+    t_new = time.time() - t0
+    rows.append(Row(f"ga/vectorized/{WORKLOAD}/mb{mb}", t_new * 1e6,
+                    f"seconds={t_new:.2f};gens={new.generations};"
+                    f"evals={new.evaluations};makespan={new.makespan:.6f}"))
+
+    t0 = time.time()
+    old = legacy.delta_fast(dag, legacy.GAOptions(**_opts(gens)))
+    t_old = time.time() - t0
+    rows.append(Row(f"ga/legacy/{WORKLOAD}/mb{mb}", t_old * 1e6,
+                    f"seconds={t_old:.2f};gens={old.generations};"
+                    f"evals={old.evaluations};makespan={old.makespan:.6f}"))
+
+    speedup = t_old / max(t_new, 1e-9)
+    rel = (new.makespan - old.makespan) / max(old.makespan, 1e-12)
+    rows.append(Row(f"ga/speedup/{WORKLOAD}/mb{mb}", t_new * 1e6,
+                    f"speedup={speedup:.2f}x;rel_makespan={rel:+.2e}"))
+
+    # trim_ports: batched candidate rounds vs serial one-drop-at-a-time,
+    # identical result required.  Trim a port-saturated feasible topology
+    # (X̄ pushed through Alg. 6 repair) so the sweep has real work to do.
+    problem = DESProblem(dag)
+    space = TopologySpace(dag)
+    g_fat, _ = space.repair(space.xbar.copy(), np.random.default_rng(0))
+    x_fat = space.to_matrix(g_fat)
+    t0 = time.time()
+    xt_new = trim_ports(dag, x_fat)            # auto backend (cost-gated)
+    t_tnew = time.time() - t0
+    t0 = time.time()
+    xt_jax = trim_ports(dag, x_fat, backend="jax")   # forced batched path
+    t_tjax = time.time() - t0
+    t0 = time.time()
+    xt_old = legacy.trim_ports(dag, x_fat)
+    t_told = time.time() - t0
+    same = bool((xt_new == xt_old).all()) and bool((xt_jax == xt_old).all())
+    ms_new = simulate(problem, xt_new).makespan
+    ms_old = simulate(problem, xt_old).makespan
+    rows.append(Row(
+        f"ga/trim_ports/{WORKLOAD}/mb{mb}", t_tnew * 1e6,
+        f"seconds={t_tnew:.2f};jax_seconds={t_tjax:.2f};"
+        f"legacy_seconds={t_told:.2f};identical={same};"
+        f"ports={int(xt_new.sum())};legacy_ports={int(xt_old.sum())};"
+        f"rel_makespan={(ms_new - ms_old) / max(ms_old, 1e-12):+.2e}"))
+
+    save_json("ga_bench", {
+        "workload": WORKLOAD, "mb": mb, "generations": gens,
+        "vectorized_seconds": t_new, "legacy_seconds": t_old,
+        "speedup": speedup, "vectorized_makespan": new.makespan,
+        "legacy_makespan": old.makespan,
+        "trim_identical": same, "trim_auto_seconds": t_tnew,
+        "trim_jax_seconds": t_tjax, "trim_legacy_seconds": t_told})
+    return rows

@@ -5,7 +5,9 @@
     PYTHONPATH=src python -m benchmarks.run --only fig6,roofline
 
 Prints ``name,us_per_call,derived`` CSV (also written to
-experiments/bench/results.csv).
+experiments/bench/results.csv) and, per suite, a machine-readable
+``experiments/bench/BENCH_<suite>.json`` so the perf trajectory can be
+tracked across PRs.
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 SUITES = ("tab1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-          "fleet", "kernels", "des", "roofline")
+          "fleet", "kernels", "des", "ga", "roofline")
 
 
 def main() -> None:
@@ -34,33 +36,42 @@ def main() -> None:
 
     from benchmarks import (des_bench, fig6_bandwidth, fig7_rates,
                             fig8_seqlen, fig9_ports, fig10_realloc,
-                            fig11_exectime, fleet_bench, kernels_bench,
-                            roofline, tab1_workloads)
-    from benchmarks.common import OUT_DIR
+                            fig11_exectime, fleet_bench, ga_bench,
+                            kernels_bench, roofline, tab1_workloads)
+    from benchmarks.common import OUT_DIR, save_json
 
     modules = {"tab1": tab1_workloads, "fig6": fig6_bandwidth,
                "fig7": fig7_rates, "fig8": fig8_seqlen,
                "fig9": fig9_ports, "fig10": fig10_realloc,
                "fig11": fig11_exectime, "fleet": fleet_bench,
                "kernels": kernels_bench,
-               "des": des_bench, "roofline": roofline}
+               "des": des_bench, "ga": ga_bench, "roofline": roofline}
 
     print("name,us_per_call,derived")
     lines = ["name,us_per_call,derived"]
     t_start = time.time()
     failures = []
+    os.makedirs(OUT_DIR, exist_ok=True)
     for s in picked:
         mod = modules[s]
         t0 = time.time()
+        rows = []
+        error = None
         try:
             for row in mod.run(full=args.full):
+                rows.append(row)
                 lines.append(row.emit())
         except Exception as exc:   # noqa: BLE001
             failures.append(s)
+            error = f"{type(exc).__name__}: {exc}"
             print(f"{s}/ERROR,0,{type(exc).__name__}:{exc}", flush=True)
             traceback.print_exc(file=sys.stderr)
-        print(f"# {s} done in {time.time()-t0:.1f}s", flush=True)
-    os.makedirs(OUT_DIR, exist_ok=True)
+        dt = time.time() - t0
+        print(f"# {s} done in {dt:.1f}s", flush=True)
+        save_json(f"BENCH_{s}", {
+            "suite": s, "full": args.full, "seconds": dt, "error": error,
+            "rows": [{"name": r.name, "us_per_call": r.us_per_call,
+                      "derived": r.derived} for r in rows]})
     with open(os.path.join(OUT_DIR, "results.csv"), "w") as f:
         f.write("\n".join(lines) + "\n")
     print(f"# total {time.time()-t_start:.1f}s -> {OUT_DIR}/results.csv",

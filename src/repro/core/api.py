@@ -122,6 +122,9 @@ def optimize(dag: CommDAG, method: str = "delta-fast",
             ub = ga.makespan * (1 + 1e-9)
             opts.upper_bound = min(opts.upper_bound, ub) \
                 if opts.upper_bound else ub
+            # route the GA incumbent into the MILP hot start: its DES trace
+            # seeds the anchors and the polish pre-pass (see MILPOptions)
+            opts.seed_x = ga.x
         opts.hot_start = True
     mres = solve_delta_milp(dag, opts)
     elapsed = time.time() - t0

@@ -42,6 +42,9 @@ class DESProblem:
 
         # ordered pod pairs with traffic
         self.pairs = dag.pod_pairs()
+        parr = np.asarray(self.pairs, dtype=np.int64).reshape(-1, 2)
+        self.pair_src = parr[:, 0]
+        self.pair_dst = parr[:, 1]
         self.pair_index = {p: i for i, p in enumerate(self.pairs)}
         self.task_pair = np.full(n, -1, dtype=np.int64)
         for t in dag.real_tasks():
@@ -90,10 +93,12 @@ class DESProblem:
 
     def link_caps(self, x: np.ndarray, ideal: bool = False) -> np.ndarray:
         """Capacity vector for all constraints given topology matrix x."""
-        caps = np.empty(self.num_cons)
-        for i, (a, b) in enumerate(self.pairs):
-            caps[i] = INF if ideal else float(x[a, b]) * self.B
-        caps[self.num_link_cons:] = self.B
+        caps = np.full(self.num_cons, float(self.B))
+        if ideal:
+            caps[:self.num_link_cons] = INF
+        else:
+            caps[:self.num_link_cons] = np.asarray(x)[
+                self.pair_src, self.pair_dst].astype(np.float64) * self.B
         return caps
 
 

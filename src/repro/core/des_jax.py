@@ -72,6 +72,9 @@ class DESArrays(NamedTuple):
 def _maxmin(arr: DESArrays, active: jax.Array, caps: jax.Array) -> jax.Array:
     """Weighted max-min fair task rates (progressive filling)."""
     n, C = arr.n, arr.num_cons
+    # hoist the loop-invariant active-membership weights out of the filling
+    # loop; `active` is fixed for the duration of one rate computation
+    act_w = jnp.where(active[arr.con_task], arr.con_w, 0.0)
 
     def cond(state):
         i, phi, unfrozen = state
@@ -79,12 +82,11 @@ def _maxmin(arr: DESArrays, active: jax.Array, caps: jax.Array) -> jax.Array:
 
     def body(state):
         i, phi, unfrozen = state
-        act_contrib = jnp.where(active[arr.con_task],
-                                arr.con_w * phi[arr.con_task], 0.0)
-        used = jax.ops.segment_sum(act_contrib, arr.con_id, num_segments=C)
-        denom = jax.ops.segment_sum(
-            jnp.where(unfrozen[arr.con_task], arr.con_w, 0.0),
-            arr.con_id, num_segments=C)
+        unf_w = jnp.where(unfrozen[arr.con_task], arr.con_w, 0.0)
+        # one fused segment reduction for (used, denom) instead of two
+        used, denom = jax.ops.segment_sum(
+            jnp.stack([act_w * phi[arr.con_task], unf_w], axis=1),
+            arr.con_id, num_segments=C).T
         slack = caps - used
         alpha_c = jnp.where(denom > 0, slack / jnp.maximum(denom, 1e-300), INF)
         alpha = jnp.maximum(jnp.min(alpha_c), 0.0)
@@ -106,7 +108,10 @@ def _simulate(arr: DESArrays, x: jax.Array, ideal_flag: jax.Array,
     """Returns (makespan, feasible, start, finish)."""
     n = arr.n
     B = arr.nic_bandwidth
-    link_caps = x[arr.link_pair_a, arr.link_pair_b].astype(jnp.float64) * B
+    # cap dtype follows the simulation dtype: hard-coding float64 is a
+    # silent no-op downcast to float32 under default x64-disabled jax
+    link_caps = x[arr.link_pair_a, arr.link_pair_b].astype(
+        arr.volume.dtype) * B
     link_caps = jnp.where(ideal_flag, INF, link_caps)
     caps = jnp.concatenate(
         [link_caps, jnp.full(arr.num_cons - arr.num_link_cons, B)])
@@ -146,8 +151,9 @@ def _simulate(arr: DESArrays, x: jax.Array, ideal_flag: jax.Array,
                                                                     1e-300),
                             INF)
         t_complete = t + jnp.min(dt_done)
-        ready2 = ready_times(missing, started, finish)
-        t_ready = jnp.min(ready2)
+        # tasks started this step are no longer pending: their ready entry
+        # drops out without recomputing the (gather + segment-max) pass
+        t_ready = jnp.min(jnp.where(newly, INF, ready))
         t_next = jnp.minimum(t_complete, t_ready)
         dt = jnp.maximum(t_next - t, 0.0)
         rem = jnp.where(active, jnp.maximum(rem - rates * dt, 0.0), rem)
@@ -155,8 +161,7 @@ def _simulate(arr: DESArrays, x: jax.Array, ideal_flag: jax.Array,
         # also complete tasks whose remaining *time* is below the float time
         # resolution at t -- otherwise `t + dt == t` stalls the simulation
         teps = 1e-5 if rem.dtype == jnp.float32 else 1e-12
-        dt_rem = jnp.where(active & (rates > 0),
-                           rem / jnp.maximum(rates, 1e-300), INF)
+        dt_rem = dt_done - dt   # remaining volume / rate after the advance
         newdone = active & jnp.isfinite(t_next) & (
             (rem <= veps * jnp.maximum(arr.volume, 1e-9))
             | (dt_rem <= teps * jnp.maximum(t_next, 1e-9)))
@@ -210,4 +215,28 @@ class JaxDES:
     def batch_makespan(self, xs) -> tuple[np.ndarray, np.ndarray]:
         """Makespans + feasibility for a (pop, P, P) batch of topologies."""
         ms, feas = self._batched(jnp.asarray(xs))
+        return np.asarray(ms), np.asarray(feas)
+
+    @functools.cached_property
+    def _batched_genomes(self):
+        arr, me = self.arrays, self.max_events
+        P = self.problem.dag.cluster.num_pods
+
+        def one(g, eu, ev):
+            x = jnp.zeros((P, P), dtype=g.dtype)
+            x = x.at[eu, ev].set(g).at[ev, eu].set(g)
+            return _simulate(arr, x, jnp.asarray(False), me)[:2]
+
+        return jax.jit(jax.vmap(one, in_axes=(0, None, None)))
+
+    def batch_genome_makespan(self, genomes, edge_u, edge_v
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Fused GA generation-step fitness: scatter a (pop, E) genome batch
+        onto (pop, P, P) topologies *on device* and simulate, all in one
+        jitted call -- one host->device transfer for the genomes, one
+        device->host for (makespan, feasible), independent of pop size."""
+        ms, feas = self._batched_genomes(
+            jnp.asarray(genomes),
+            jnp.asarray(edge_u, dtype=jnp.int32),
+            jnp.asarray(edge_v, dtype=jnp.int32))
         return np.asarray(ms), np.asarray(feas)

@@ -51,6 +51,8 @@ class MILPOptions:
     mip_rel_gap: float = 1e-4
     hot_start: bool = True
     upper_bound: float | None = None   # externally supplied incumbent C
+    seed_x: np.ndarray | None = None   # incumbent topology (e.g. delta-fast)
+                                       # whose DES trace seeds the hot start
     xbar: np.ndarray | None = None     # Alg. 2 bounds (computed if None)
     t_up: float | None = None
     verbose: bool = False
@@ -411,6 +413,17 @@ def solve_delta_milp(dag: CommDAG, opts: MILPOptions | None = None
     t0 = time.time()
     problem = DESProblem(dag)
     baseline, anchors, K_prof = profile_anchors(problem)
+    if opts.seed_x is not None:
+        # seed the anchors/polish trace from an incumbent topology (the
+        # GA's array-resident result): the hot-start pre-pass then fixes
+        # the activation pattern to a near-optimal schedule instead of the
+        # one-circuit baseline.  K keeps the default profile as a floor so
+        # the seeded windows never have fewer intervals than the baseline.
+        try:
+            sb, sa, sk = profile_anchors(problem, np.asarray(opts.seed_x))
+            baseline, anchors, K_prof = sb, sa, max(sk, K_prof)
+        except RuntimeError:
+            pass    # infeasible seed: keep the default profile
     t_up = opts.t_up or estimate_t_up(problem)
     K = opts.K or (K_prof + opts.k_slack)
     if opts.prune:

@@ -12,12 +12,14 @@ Two deliberately cheap mechanisms replace a full re-solve:
     through `repro.kernels` (`fill_matvec`: Pallas on TPU, jnp ref on CPU)
     whenever there is more than one item to fill.
 
-  * `reallocate` -- generates a portfolio of boosted candidate topologies
-    (traffic-weighted, concentrated, round-robin, randomized) and evaluates
-    the *whole portfolio* in ONE `JaxDES.batch_makespan` vmap call instead
-    of per-candidate Python-loop simulations.  The incumbent topology is
-    always candidate 0, and the winner is certified against the exact numpy
-    DES, so a reallocation can never worsen a tenant's NCT.
+  * `reallocate` -- generates a portfolio of boosted candidate genomes
+    (traffic-weighted, concentrated, round-robin, randomized) over the
+    active pod pairs and evaluates the *whole portfolio* in ONE
+    `JaxDES.batch_genome_makespan` call: the genome->topology scatter and
+    the vmap DES run fused on device, so the host ships (K, E) ints instead
+    of (K, P, P) matrices.  The incumbent is always candidate 0, and the
+    winner is certified against the exact numpy DES, so a reallocation can
+    never worsen a tenant's NCT.
 """
 from __future__ import annotations
 
@@ -103,6 +105,11 @@ def waterfill_grants(demands: np.ndarray, supply: np.ndarray,
     return grants.reshape(T, P)
 
 
+def _edge_arrays(pairs) -> tuple[np.ndarray, np.ndarray]:
+    earr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    return earr[:, 0], earr[:, 1]
+
+
 def port_demand(dag: CommDAG, x: np.ndarray,
                 xbar: np.ndarray | None = None) -> np.ndarray:
     """Max useful extra ports per local pod: beyond the Alg. 2 concurrency
@@ -110,76 +117,108 @@ def port_demand(dag: CommDAG, x: np.ndarray,
     if xbar is None:
         xbar = x_upper_bound(dag)
     want = np.zeros(dag.cluster.num_pods, dtype=np.int64)
-    for i, j in dag.undirected_pairs():
-        extra = max(int(xbar[i, j]) - int(x[i, j]), 0)
-        want[i] += extra
-        want[j] += extra
+    pairs = dag.undirected_pairs()
+    if not pairs:
+        return want
+    eu, ev = _edge_arrays(pairs)
+    extra = np.maximum(np.asarray(xbar)[eu, ev].astype(np.int64)
+                       - np.asarray(x)[eu, ev].astype(np.int64), 0)
+    np.add.at(want, eu, extra)
+    np.add.at(want, ev, extra)
     return want
 
 
 # ------------------------------------------------------- candidate topologies
-def _greedy_fill(x: np.ndarray, limits: np.ndarray, pairs: list,
-                 weight_of, max_add: int | None = None) -> np.ndarray:
-    """Add circuits one at a time to the heaviest addable pair."""
-    x = x.copy()
-    usage = x.sum(axis=1)
+def _greedy_fill(g0: np.ndarray, usage0: np.ndarray, limits: np.ndarray,
+                 eu: np.ndarray, ev: np.ndarray, weight_fn,
+                 max_add: int | None = None) -> np.ndarray:
+    """Add circuits one at a time to the heaviest addable pair.
+
+    Genome-array form: `g0` is the (E,) circuit vector over the undirected
+    pairs (eu, ev), `usage0` the per-pod ports already consumed outside the
+    genome, and `weight_fn(g) -> (E,)` the current per-pair weights (-inf
+    marks pairs a strategy never fills).  Each step is one vectorized
+    argmax instead of a Python scan over pairs."""
+    g = g0.copy()
+    usage = usage0.copy()
+    np.add.at(usage, eu, g)
+    np.add.at(usage, ev, g)
     added = 0
     while max_add is None or added < max_add:
-        best, best_w = None, -INF
-        for (i, j) in pairs:
-            if usage[i] < limits[i] and usage[j] < limits[j]:
-                w = weight_of(i, j, x)
-                if w > best_w:
-                    best, best_w = (i, j), w
-        if best is None:
+        addable = (usage[eu] < limits[eu]) & (usage[ev] < limits[ev])
+        w = np.where(addable, weight_fn(g), -INF)
+        e = int(np.argmax(w))
+        if not np.isfinite(w[e]):
             break
-        i, j = best
-        x[i, j] += 1
-        x[j, i] += 1
-        usage[i] += 1
-        usage[j] += 1
+        g[e] += 1
+        usage[eu[e]] += 1
+        usage[ev[e]] += 1
         added += 1
+    return g
+
+
+def _candidate_genomes(dag: CommDAG, g0: np.ndarray, usage0: np.ndarray,
+                       limits: np.ndarray, eu: np.ndarray, ev: np.ndarray,
+                       rng: np.random.Generator,
+                       num_random: int = 8) -> np.ndarray:
+    """Portfolio of boosted genomes within per-pod `limits`; row 0 is
+    always `g0` itself, so the portfolio minimum can never be worse than
+    the incumbent."""
+    vol = dag.traffic_matrix()
+    uvol = vol[eu, ev] + vol[ev, eu]
+    cands = [g0.copy()]
+    # (a) per-circuit volume: relieve the most oversubscribed pair first
+    cands.append(_greedy_fill(g0, usage0, limits, eu, ev,
+                              lambda g: uvol / np.maximum(g, 1)))
+    # (b) concentrated: everything to the single heaviest pair
+    hot = np.where(np.arange(len(eu)) == int(np.argmax(uvol)), 1.0, -INF)
+    cands.append(_greedy_fill(g0, usage0, limits, eu, ev, lambda g: hot))
+    # (c) round-robin: spread evenly (least-loaded pair first)
+    cands.append(_greedy_fill(g0, usage0, limits, eu, ev,
+                              lambda g: -g.astype(np.float64)))
+    # (d) randomized greedy fills
+    for _ in range(num_random):
+        jitter = rng.random(len(eu))
+        cands.append(_greedy_fill(g0, usage0, limits, eu, ev,
+                                  lambda g: jitter * uvol / np.maximum(g, 1)))
+    G = np.stack(cands)
+    # vectorized dedup, keeping first occurrences (incumbent stays row 0)
+    _, first = np.unique(G, axis=0, return_index=True)
+    return G[np.sort(first)]
+
+
+def _scatter(g: np.ndarray, eu: np.ndarray, ev: np.ndarray,
+             P: int) -> np.ndarray:
+    x = np.zeros((P, P), dtype=np.int64)
+    x[eu, ev] = g
+    x[ev, eu] = g
     return x
+
+
+def _genome_view(x0: np.ndarray, pairs, P: int):
+    """Split a topology into (eu, ev, genome, rem): the active-pair circuit
+    vector plus the off-pair remainder `rem` (circuits on pairs without
+    traffic, preserved verbatim through candidate generation)."""
+    eu, ev = _edge_arrays(pairs)
+    g0 = np.asarray(x0)[eu, ev].astype(np.int64)
+    rem = np.asarray(x0) - _scatter(g0, eu, ev, P)
+    return eu, ev, g0, rem
 
 
 def candidate_boosts(dag: CommDAG, x0: np.ndarray, limits: np.ndarray,
                      rng: np.random.Generator,
                      num_random: int = 8) -> np.ndarray:
-    """Portfolio of boosted topologies within per-pod `limits`.
-
-    Candidate 0 is always `x0` itself, so the portfolio minimum can never
-    be worse than the incumbent.
-    """
+    """Portfolio of boosted topologies within per-pod `limits` (matrix
+    view of `_candidate_genomes`; candidate 0 is always `x0`)."""
     pairs = dag.undirected_pairs()
-    vol = dag.traffic_matrix()
-    uvol = {(i, j): vol[i, j] + vol[j, i] for i, j in pairs}
-    limits = np.asarray(limits, dtype=np.int64)
-
-    cands = [x0.copy()]
-    # (a) per-circuit volume: relieve the most oversubscribed pair first
-    cands.append(_greedy_fill(
-        x0, limits, pairs, lambda i, j, x: uvol[(i, j)] / max(x[i, j], 1)))
-    # (b) concentrated: everything to the single heaviest pair
-    if pairs:
-        hot = max(pairs, key=lambda p: uvol[p])
-        cands.append(_greedy_fill(x0, limits, [hot], lambda i, j, x: 1.0))
-    # (c) round-robin: spread evenly (least-loaded pair first)
-    cands.append(_greedy_fill(
-        x0, limits, pairs, lambda i, j, x: -float(x[i, j])))
-    # (d) randomized greedy fills
-    for _ in range(num_random):
-        jitter = {p: rng.random() for p in pairs}
-        cands.append(_greedy_fill(
-            x0, limits, pairs,
-            lambda i, j, x: jitter[(i, j)] * uvol[(i, j)] / max(x[i, j], 1)))
-
-    uniq: dict[bytes, np.ndarray] = {}
-    for c in cands:
-        uniq.setdefault(c.tobytes(), c)
-    out = list(uniq.values())
-    # keep the incumbent at index 0
-    out.sort(key=lambda c: 0 if c.tobytes() == x0.tobytes() else 1)
-    return np.stack(out)
+    if not pairs:
+        return np.asarray(x0)[None].copy()
+    P = dag.cluster.num_pods
+    eu, ev, g0, rem = _genome_view(x0, pairs, P)
+    G = _candidate_genomes(dag, g0, rem.sum(axis=1),
+                           np.asarray(limits, np.int64),
+                           eu, ev, rng, num_random=num_random)
+    return np.stack([_scatter(g, eu, ev, P) + rem for g in G])
 
 
 # ------------------------------------------------------------- reallocation
@@ -203,23 +242,37 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
                base_comm_time: float | None = None) -> ReallocResult:
     """Re-optimize one tenant's topology under boosted port limits.
 
-    All candidates are scored by a single batched `JaxDES.batch_makespan`
-    call; the winner is certified with the exact numpy DES and only
-    accepted if it does not worsen the tenant's communication time.
+    All candidate genomes are scored by a single fused
+    `JaxDES.batch_genome_makespan` call; the winner is certified with the
+    exact numpy DES and only accepted if it does not worsen the tenant's
+    communication time.
     Pass `base_makespan`/`base_comm_time` (the incumbent's known exact
     quality, e.g. from the committed plan) to skip re-simulating `x0`.
     """
     rng = rng or np.random.default_rng(0)
     problem = DESProblem(dag)
-    xs = candidate_boosts(dag, x0, boosted_limits, rng,
-                          num_random=num_random)
+    pairs = dag.undirected_pairs()
+    if not pairs:
+        if base_makespan is None or base_comm_time is None:
+            base = simulate(problem, x0)
+            base_makespan, base_comm_time = base.makespan, base.comm_time
+        nct = base_comm_time / ideal_comm_time if ideal_comm_time > 0 else INF
+        return ReallocResult(x=np.asarray(x0).copy(), makespan=base_makespan,
+                             comm_time=base_comm_time, nct=nct,
+                             improved=False, num_candidates=1, batch_calls=0)
+    P = dag.cluster.num_pods
+    eu, ev, g0, rem = _genome_view(x0, pairs, P)
+    G = _candidate_genomes(dag, g0, rem.sum(axis=1),
+                           np.asarray(boosted_limits, dtype=np.int64),
+                           eu, ev, rng, num_random=num_random)
     if des is None:
         from repro.core.des_jax import JaxDES
         des = JaxDES(problem)
-    ms, feas = des.batch_makespan(xs)            # ONE vmap over candidates
+    # ONE fused genome-scatter + vmap call over the whole portfolio
+    ms, feas = des.batch_genome_makespan(G, eu, ev)
     score = np.where(feas, ms, INF)
     # lexicographic tie-break: fewer total ports on ~equal makespan
-    ports = xs.reshape(len(xs), -1).sum(axis=1)
+    ports = 2 * G.sum(axis=1) + int(rem.sum())
     finite = score[np.isfinite(score)]
     ref = float(finite.min()) if len(finite) and finite.min() > 0 else 1.0
     rel = np.where(np.isfinite(score), np.round(score / ref, 6), INF)
@@ -229,14 +282,16 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
         base = simulate(problem, x0)
         base_makespan, base_comm_time = base.makespan, base.comm_time
     makespan, comm_time = base_makespan, base_comm_time
+    x_best = _scatter(G[best], eu, ev, P) + rem
     if best != 0:
-        cand = simulate(problem, xs[best])        # certify the winner
+        cand = simulate(problem, x_best)          # certify the winner
         if cand.feasible and cand.comm_time <= base_comm_time * (1 + 1e-9):
             makespan, comm_time = cand.makespan, cand.comm_time
         else:
             best = 0                              # never worsen the tenant
+            x_best = _scatter(G[0], eu, ev, P) + rem
     nct = comm_time / ideal_comm_time if ideal_comm_time > 0 else INF
     return ReallocResult(
-        x=xs[best].copy(), makespan=makespan, comm_time=comm_time,
-        nct=nct, improved=best != 0, num_candidates=len(xs),
+        x=x_best, makespan=makespan, comm_time=comm_time,
+        nct=nct, improved=best != 0, num_candidates=len(G),
         details={"scores_finite": int(np.isfinite(score).sum())})

@@ -86,6 +86,21 @@ def test_infeasible_topology():
     assert not res.feasible and res.makespan == np.inf
 
 
+@settings(max_examples=20, deadline=None)
+@given(random_comm_dags())
+def test_link_caps_matches_loop_reference(dag):
+    """Vectorized capacity gather == the per-pair loop it replaced."""
+    prob = DESProblem(dag)
+    x = one_circuit_topology(dag) * 3
+    for ideal in (False, True):
+        caps = prob.link_caps(x, ideal=ideal)
+        ref = np.empty(prob.num_cons)
+        for i, (a, b) in enumerate(prob.pairs):
+            ref[i] = np.inf if ideal else float(x[a, b]) * prob.B
+        ref[prob.num_link_cons:] = prob.B
+        assert np.array_equal(caps, ref)
+
+
 @settings(max_examples=40, deadline=None)
 @given(random_comm_dags())
 def test_property_invariants(dag):
