@@ -6,8 +6,10 @@
 
 Prints ``name,us_per_call,derived`` CSV (also written to
 experiments/bench/results.csv) and, per suite, a machine-readable
-``experiments/bench/BENCH_<suite>.json`` so the perf trajectory can be
-tracked across PRs.
+``BENCH_<suite>.json`` -- written both under experiments/bench/ and at the
+repo root, where the cross-PR perf-trajectory tooling reads it (the
+smoke-sized des/ga/tab1 files are committed with each PR; CI runs the same
+smoke command and uploads the results as artifacts).
 """
 from __future__ import annotations
 
@@ -51,6 +53,7 @@ def main() -> None:
     lines = ["name,us_per_call,derived"]
     t_start = time.time()
     failures = []
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     os.makedirs(OUT_DIR, exist_ok=True)
     for s in picked:
         mod = modules[s]
@@ -68,10 +71,14 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
         dt = time.time() - t0
         print(f"# {s} done in {dt:.1f}s", flush=True)
-        save_json(f"BENCH_{s}", {
+        payload = {
             "suite": s, "full": args.full, "seconds": dt, "error": error,
             "rows": [{"name": r.name, "us_per_call": r.us_per_call,
-                      "derived": r.derived} for r in rows]})
+                      "derived": r.derived} for r in rows]}
+        save_json(f"BENCH_{s}", payload)
+        # mirror to the repo root: the growth loop's perf trajectory reads
+        # BENCH_*.json from there, not from experiments/bench/
+        save_json(f"BENCH_{s}", payload, out_dir=repo_root)
     with open(os.path.join(OUT_DIR, "results.csv"), "w") as f:
         f.write("\n".join(lines) + "\n")
     print(f"# total {time.time()-t_start:.1f}s -> {OUT_DIR}/results.csv",

@@ -19,11 +19,18 @@ def run(full: bool = False) -> list[Row]:
         build_us = (time.time() - t0) * 1e6
         _, _, K = profile_anchors(DESProblem(dag))
         s = dag.summary()
-        derived = (f"tp={plan.tp};pp={plan.pp};dp={plan.dp};"
+        # MoE-vs-dense traffic split: EP all-to-all bytes vs PP/DP/xattn
+        ep_gb = sum(v for k, v in s["volume_by_kind_gb"].items()
+                    if k.startswith("ep_a2a"))
+        dense_gb = s["total_volume_gb"] - ep_gb
+        derived = (f"tp={plan.tp};pp={plan.pp};dp={plan.dp};ep={plan.ep};"
                    f"gpus={plan.num_gpus};tasks={s['num_tasks']};"
                    f"deps={s['num_deps']};pods={s['num_pods']};K={K};"
-                   f"gb_per_iter={s['total_volume_gb']:.1f}")
-        payload[w] = {**s, "K": K}
+                   f"gb_per_iter={s['total_volume_gb']:.1f};"
+                   f"ep_gb={ep_gb:.1f};dense_gb={dense_gb:.1f};"
+                   f"ep_frac={s['ep_volume_fraction']:.3f}")
+        payload[w] = {**s, "K": K, "ep_gb": ep_gb, "dense_gb": dense_gb,
+                      "ep_spans": [list(g) for g in dag.cluster.ep_spans]}
         rows.append(Row(f"tab1/{w}", build_us, derived))
     save_json("tab1_workloads", payload)
     return rows

@@ -236,6 +236,7 @@ def make_job(arch: ArchSpec, seq_len: int = 4096,
     per_stage = total_layers // pp
     stage_params: list[float] = []
     stage_active: list[float] = []
+    stage_moe: list[int] = []
     enc_stages = enc_layers // per_stage if enc_layers else 0
     d = cfg.d_model
     enc_layer_p = (cfg.encoder_params() / max(enc_layers, 1)) \
@@ -243,6 +244,7 @@ def make_job(arch: ArchSpec, seq_len: int = 4096,
     for s in range(pp):
         lo, hi = s * per_stage, (s + 1) * per_stage
         p = a = 0.0
+        n_moe = 0
         for li in range(lo, hi):
             if li < enc_layers:
                 p += enc_layer_p
@@ -251,6 +253,7 @@ def make_job(arch: ArchSpec, seq_len: int = 4096,
                 i = li - enc_layers
                 p += cfg.layer_params(i)
                 a += cfg.layer_active_params(i)
+                n_moe += int(cfg.is_moe_layer(i))
         if s == 0:
             p += cfg.embed_params()
             a += cfg.embed_params() / max(seq_len, 1)  # sparse lookup
@@ -259,6 +262,7 @@ def make_job(arch: ArchSpec, seq_len: int = 4096,
             a += cfg.head_params()
         stage_params.append(p)
         stage_active.append(a)
+        stage_moe.append(n_moe)
     mb = microbatches or plan.num_microbatches
     return JobSpec(
         name=cfg.name,
@@ -268,6 +272,9 @@ def make_job(arch: ArchSpec, seq_len: int = 4096,
         d_model=d,
         stage_params=tuple(stage_params),
         active_stage_params=tuple(stage_active),
+        moe_experts=cfg.moe_experts, moe_top_k=cfg.moe_top_k,
+        moe_every=cfg.moe_every,
+        moe_stage_layers=tuple(stage_moe) if cfg.moe_experts else (),
         gpus_per_pod_per_replica=plan.gpus_per_pod_per_replica,
         act_bytes=act_bytes, grad_bytes=grad_bytes,
         gpu_flops=plan.gpu_flops,

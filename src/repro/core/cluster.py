@@ -34,12 +34,19 @@ class ClusterSpec:
       intra_pod_bandwidth: per-GPU intra-pod electrical bandwidth used only to
                     derive durations of intra-pod communication before DAG
                     reduction (bytes/s).
+      ep_spans:     one tuple of pod ids per expert-parallel group, listing
+                    the pods the group's GPUs span (empty when the job has
+                    no cross-replica EP traffic).  Purely descriptive:
+                    recorded in the tab1 benchmark payload so consumers of
+                    the workload JSON can reason about concurrent EP
+                    all-to-all demand without re-deriving the placement.
     """
 
     num_pods: int
     port_limits: tuple[int, ...]
     nic_bandwidth: float
     intra_pod_bandwidth: float = 900e9
+    ep_spans: tuple[tuple[int, ...], ...] = ()
 
     def __post_init__(self) -> None:
         if len(self.port_limits) != self.num_pods:
@@ -69,12 +76,19 @@ class Placement:
     tp*pp GPUs spans ceil(tp*pp / gppr) pods, stages packed contiguously.
     `reverse_stages=True` gives the Model^T deployment of Fig. 10 (reversed
     stage-to-pod mapping over the same pods).
+
+    `ep` is the expert-parallel degree: EP groups stride across DP replicas
+    within a stage, so group g covers replicas [g*span, (g+1)*span) with
+    span = min(ep, dp).  A replica's stage-s expert shard exchanges
+    all-to-all traffic with the stage-s shards of its group peers, which
+    live in the peers' pods.
     """
 
     tp: int
     pp: int
     dp: int
     gpus_per_pod_per_replica: int
+    ep: int = 1
     reverse_stages: bool = False
 
     def __post_init__(self) -> None:
@@ -83,6 +97,11 @@ class Placement:
             raise ValueError(
                 f"gpus_per_pod_per_replica={gppr} must be a multiple of tp="
                 f"{self.tp} so stages do not straddle pods")
+        if self.ep > 1:
+            if self.ep <= self.dp and self.dp % self.ep:
+                raise ValueError(f"ep={self.ep} must divide dp={self.dp}")
+            if self.ep > self.dp and self.ep % self.dp:
+                raise ValueError(f"ep={self.ep} > dp={self.dp} needs dp | ep")
 
     @property
     def gpus_per_replica(self) -> int:
@@ -128,7 +147,30 @@ class Placement:
         """Default U_p = number of job GPUs in each pod (paper fairness rule)."""
         return tuple(self.gpus_in_pod(p) for p in range(self.num_pods))
 
+    # ------------------------------------------------------------ EP groups
+    @property
+    def ep_span(self) -> int:
+        """DP replicas spanned by one EP group (1 -> no cross-replica EP)."""
+        return min(self.ep, self.dp) if self.ep > 1 else 1
+
+    def ep_groups(self) -> list[tuple[int, ...]]:
+        """Replica ids per EP group; empty when EP stays within a replica."""
+        span = self.ep_span
+        if span < 2:
+            return []
+        return [tuple(range(g * span, (g + 1) * span))
+                for g in range(self.dp // span)]
+
+    def ep_group_pods(self, group: Sequence[int]) -> tuple[int, ...]:
+        """Pods spanned by one EP group's GPUs (all stages)."""
+        return tuple(sorted({self.pod_of(r, s)
+                             for r in group for s in range(self.pp)}))
+
+    def ep_spans(self) -> tuple[tuple[int, ...], ...]:
+        return tuple(self.ep_group_pods(g) for g in self.ep_groups())
+
     def cluster(self, nic_bandwidth: float, **kw) -> ClusterSpec:
+        kw.setdefault("ep_spans", self.ep_spans())
         return ClusterSpec(num_pods=self.num_pods,
                            port_limits=self.port_limits(),
                            nic_bandwidth=nic_bandwidth, **kw)

@@ -27,7 +27,8 @@ class CommTask:
     volume: float         # V_m: bytes
     src_gpus: tuple[int, ...]
     dst_gpus: tuple[int, ...]
-    kind: str = "comm"    # pp_fwd | pp_bwd | dp | xattn | virtual
+    kind: str = "comm"    # pp_fwd | pp_bwd | dp | xattn | ep_a2a_fwd |
+                          # ep_a2a_bwd | virtual
     tag: tuple = ()       # free-form (replica, stage, microbatch, ...) labels
 
     @property
@@ -211,8 +212,25 @@ class CommDAG:
         return np.array([max(t.flows, 1) for t in self.tasks],
                         dtype=np.float64)
 
+    def volume_by_kind(self) -> dict[str, float]:
+        """Aggregate bytes per task kind (MoE-vs-dense traffic split)."""
+        out: dict[str, float] = collections.defaultdict(float)
+        for t in self.real_tasks():
+            out[t.kind] += t.volume
+        return dict(out)
+
+    def ep_volume_fraction(self, by_kind: dict[str, float] | None = None
+                           ) -> float:
+        """Share of total inter-pod bytes carried by EP all-to-all tasks."""
+        if by_kind is None:
+            by_kind = self.volume_by_kind()
+        total = sum(by_kind.values())
+        ep = sum(v for k, v in by_kind.items() if k.startswith("ep_a2a"))
+        return ep / total if total > 0 else 0.0
+
     def summary(self) -> dict:
         kinds = collections.Counter(t.kind for t in self.real_tasks())
+        by_kind = self.volume_by_kind()
         return {
             "num_tasks": self.num_real_tasks,
             "num_deps": len(self.deps),
@@ -220,6 +238,8 @@ class CommDAG:
             "pairs": len(self.pod_pairs()),
             "kinds": dict(kinds),
             "total_volume_gb": self.traffic_matrix().sum() / 1e9,
+            "volume_by_kind_gb": {k: v / 1e9 for k, v in by_kind.items()},
+            "ep_volume_fraction": self.ep_volume_fraction(by_kind),
         }
 
 

@@ -511,13 +511,33 @@ def validate_solution(dag: CommDAG, res: MILPResult, tol: float = 1e-5
     for p in range(dag.cluster.num_pods):
         if res.x[p].sum() > U[p]:
             errors.append(f"ports pod {p}")
-    # link capacity per interval
+    # link capacity per interval: aggregate volume over all tasks sharing
+    # an ordered pod pair must fit the pair's circuits (Eq. 9)
     t = res.t
+    agg: dict[tuple[tuple[int, int], int], float] = {}
     for (m, k), v in res.w.items():
+        agg_key = (dag.tasks[m].pair, k)
+        agg[agg_key] = agg.get(agg_key, 0.0) + v
+    for (pair, k), v in agg.items():
         dt = t[k] - t[k - 1]
-        task = dag.tasks[m]
-        cap = res.x[task.src_pod, task.dst_pod] * B * dt
+        cap = res.x[pair] * B * dt
         if v > cap * (1 + 1e-6) + tol * VOL:
-            # aggregate check is done below; single-task can't exceed alone
-            errors.append(f"link cap task {m} interval {k}")
+            errors.append(f"link cap pair {pair} interval {k}")
+    # NIC injection/reception per equivalence class & interval (Eq. 10):
+    # sum_m w_{m,k} / F_m <= B * Delta_k for every GPU's task set
+    src_classes, dst_classes = dag.nic_classes()
+    flows = dag.flows()
+    w_of_task: dict[int, list[tuple[int, float]]] = {}
+    for (m, k), v in res.w.items():
+        w_of_task.setdefault(m, []).append((k, v))
+    for side, classes in (("src", src_classes), ("dst", dst_classes)):
+        for ci, (tids, mult) in enumerate(classes):
+            per_k: dict[int, float] = {}
+            for m in tids:
+                for k, v in w_of_task.get(m, ()):
+                    per_k[k] = per_k.get(k, 0.0) + v / flows[m]
+            for k, v in per_k.items():
+                dt = t[k] - t[k - 1]
+                if v > B * dt * mult * (1 + 1e-6) + tol * VOL:
+                    errors.append(f"nic {side} class {ci} interval {k}")
     return errors

@@ -124,8 +124,12 @@ def task_time_index_pruning(dag: CommDAG, K: int,
             bump = 2 if d.delta > 0 else 1
             k_max[u] = min(k_max[u], k_max[d.succ] - bump)
 
-    k_min[1:] = np.clip(k_min[1:], 1, K)
-    k_max[1:] = np.clip(k_max[1:], 1, K)
+    # emptiness must be checked on the *unclipped* propagated values:
+    # clipping into [1, K] first would silently repair a genuinely
+    # infeasible window (e.g. k_max < 1 after the backward pass) into
+    # [1, 1].  No clip is needed after the check: k_min >= 1 and only
+    # increases, k_max <= K and only decreases, so any window passing the
+    # check is already inside [1, K].
     if (k_max[1:] < k_min[1:]).any():
         bad = int(np.sum(k_max[1:] < k_min[1:]))
         raise ValueError(

@@ -7,9 +7,22 @@ The full DAG contains three node kinds:
   * inter-pod communication nodes (durations decided by the topology).
 
 Dependency categories (paper Fig. 3a):
-  (1) data dependencies  (activation / gradient / encoder-output arrival),
+  (1) data dependencies  (activation / gradient / encoder-output arrival,
+      plus the expert-parallel all-to-all of MoE stages: dispatch + combine
+      per MoE layer, aggregated per (replica, microbatch, stage, direction)
+      and wired between the F/B compute nodes so it contends with the PP
+      transfer on the same boundary),
   (2) scheduling dependencies (1F1B op order per stage GPU),
   (3) gradient dependencies (DP sync waits for the last microbatch backward).
+
+EP placement assumption: EP groups stride across DP replicas within a
+stage (Placement.ep_groups), so the all-to-all is inter-pod even when a
+replica's whole pipeline fits in one pod.  Under the single-replica
+projection (reduce_replicas=True) each EP group is represented by the pair
+0 -> 1 plus its isomorphic wraparound image 1 -> 0 -- the same
+representative-pair treatment as the DP ring, port-exact per pod but
+concentrating the (ep-1)-peer fan-out onto one pod pair.  jobs with ep == 1
+build DAGs bit-identical to the pre-MoE builder.
 
 Graph reduction replaces chains of intra-pod nodes between inter-pod tasks by
 rigid-delay edges delta (Eq. 2).  Because completion-to-start edges over a
@@ -150,6 +163,57 @@ def build_full_dag(job: JobSpec, cluster: ClusterSpec,
                                    "xattn", (r, b, s_dec))
                     g.link(fwd[(r, b, e_last)], cx)
                     g.link(cx, fwd[(r, b, s_dec)])
+
+    # (1c) expert-parallel all-to-all (MoE dispatch + combine per stage).
+    # EP groups stride across DP replicas within a stage, so the all-to-all
+    # crosses pods even when a replica's whole pipeline fits in one pod.
+    # Each task aggregates one replica's full a2a egress for one
+    # (microbatch, MoE stage, direction) onto its representative ring pair;
+    # under the single-replica projection we keep the pair 0 -> 1 plus the
+    # isomorphic wraparound image 1 -> 0, exactly like the DP ring below.
+    # The fwd a2a is wired F(s) -> a2a -> F(s+1) (B(s) at the last stage)
+    # and the bwd a2a B(s) -> a2a -> B(s-1): with atomic compute nodes the
+    # intra-layer dispatch/combine collapses onto the stage boundary, where
+    # it contends with the PP transfer -- the concurrent-demand burst the
+    # traffic-matrix view obscures.
+    ep_span = placement.ep_span
+    if ep_span >= 2 and any(job.moe_stage_layers):
+        if reduce_replicas:
+            # projection: pair 0 -> 1 plus wraparound image, replica-0 gates
+            # (ep_span >= 2 implies dp >= 2, so replica 1's pods exist)
+            ep_groups = [([(0, 1), (1, 0)], [0])]
+        else:
+            # collective gating: every group member's compute node bounds
+            # every pair task of its group
+            ep_groups = [
+                ([(g * ep_span + i, g * ep_span + (i + 1) % ep_span)
+                  for i in range(ep_span)],
+                 list(range(g * ep_span, (g + 1) * ep_span)))
+                for g in range(job.dp // ep_span)]
+        for pairs, gates in ep_groups:
+            for s in range(S):
+                vol = job.ep_a2a_stage_volume(s)
+                if vol <= 0.0:
+                    continue
+                for b in range(1, MB + 1):
+                    for r_src, r_dst in pairs:
+                        pod_s = placement.pod_of(r_src, s)
+                        pod_d = placement.pod_of(r_dst, s)
+                        ca = comm_node(pod_s, pod_d, vol, job.tp,
+                                       placement.gpu_ids(r_src, s),
+                                       placement.gpu_ids(r_dst, s),
+                                       "ep_a2a_fwd", (r_src, b, s))
+                        cb = comm_node(pod_d, pod_s, vol, job.tp,
+                                       placement.gpu_ids(r_dst, s),
+                                       placement.gpu_ids(r_src, s),
+                                       "ep_a2a_bwd", (r_dst, b, s))
+                        for r in gates:
+                            g.link(fwd[(r, b, s)], ca)
+                            g.link(ca, fwd[(r, b, s + 1)] if s < S - 1
+                                   else bwd[(r, b, s)])
+                            g.link(bwd[(r, b, s)], cb)
+                            if s > 0:
+                                g.link(cb, bwd[(r, b, s - 1)])
 
     # (3) gradient dependencies: DP ring sync per stage after last backward
     if job.dp >= 2:

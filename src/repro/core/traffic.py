@@ -9,6 +9,17 @@ the same quantities analytically:
   DP gradient-sync volume per stage (unidirectional ring all-reduce, so the
   single-replica projection of Sec. IV-A1 stays port-exact):
       V_dp = 2 * (dp-1)/dp * stage_param_bytes   per ring link r -> r+1
+  EP all-to-all volume per MoE dispatch (== combine) per replica:
+      V_ep = micro_tokens * d_model * act_bytes * top_k * (ep-1)/ep
+  (each routed token copy leaves the local expert shard with probability
+  (ep-1)/ep; forward and backward each perform one dispatch + one combine
+  per MoE layer, so one stage contributes 2 * n_moe_layers(stage) * V_ep
+  per direction).  EP groups stride across DP replicas within a stage --
+  replica r exchanges tokens with the other min(ep, dp) - 1 replicas of its
+  group, whose stage-s shards live in different pods.  When ep > dp
+  (jamba-style expert sharding inside the TP group) the cross-replica span
+  saturates at dp and the intra-pod fraction of the all-to-all is still
+  charged to V_ep -- a deliberate, slightly conservative upper bound.
   compute durations from a FLOPs model:
       fwd(b, s) = 2 * active_stage_params[s] * micro_tokens / (tp * gpu_flops)
       bwd       = 2 * fwd
@@ -29,6 +40,14 @@ class JobSpec:
       are derived with grad_bytes).  For MoE models this includes all experts.
     active_stage_params: parameters touched per token (MoE: routed experts
       only) -- drives compute durations.
+    moe_experts / moe_top_k / moe_every: MoE routing shape (from
+      ModelConfig); moe_top_k drives the EP all-to-all volume.
+    moe_stage_layers: number of MoE layers hosted by each pipeline stage
+      (pp entries; make_job derives it from ModelConfig.is_moe_layer).
+      Empty means no EP traffic is modeled even if ep > 1.
+    ep: expert-parallel degree.  EP groups stride across DP replicas within
+      a stage (see module docstring); ep == 1 disables EP traffic entirely
+      and yields DAGs bit-identical to the pre-MoE builder.
     """
 
     name: str
@@ -42,6 +61,10 @@ class JobSpec:
     active_stage_params: tuple[float, ...] = ()
     gpus_per_pod_per_replica: int = 16
     ep: int = 1
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_every: int = 1
+    moe_stage_layers: tuple[int, ...] = ()
     act_bytes: int = 2
     grad_bytes: int = 2
     gpu_flops: float = 140e12   # effective per-GPU throughput (bf16 * MFU)
@@ -57,6 +80,17 @@ class JobSpec:
             raise ValueError("active_stage_params must have pp entries")
         if self.num_microbatches < 1 or self.pp < 1:
             raise ValueError("bad schedule sizes")
+        if self.moe_stage_layers and len(self.moe_stage_layers) != self.pp:
+            raise ValueError("moe_stage_layers must have pp entries")
+        if self.ep > 1:
+            if self.ep <= self.dp and self.dp % self.ep:
+                raise ValueError(
+                    f"ep={self.ep} must divide dp={self.dp} (EP groups "
+                    f"stride across DP replicas within a stage)")
+            if self.ep > self.dp and self.ep % self.dp:
+                raise ValueError(
+                    f"ep={self.ep} > dp={self.dp} requires dp | ep (the "
+                    f"per-replica remainder shards inside the TP group)")
 
     @property
     def active(self) -> tuple[float, ...]:
@@ -66,6 +100,7 @@ class JobSpec:
     def placement(self, reverse_stages: bool = False) -> Placement:
         return Placement(tp=self.tp, pp=self.pp, dp=self.dp,
                          gpus_per_pod_per_replica=self.gpus_per_pod_per_replica,
+                         ep=self.ep,
                          reverse_stages=reverse_stages)
 
     def cluster(self, inter_pod_gbps: float = 400.0,
@@ -86,6 +121,23 @@ class JobSpec:
     def dp_volume(self, stage: int) -> float:
         bytes_ = self.stage_params[stage] * self.grad_bytes
         return float(2.0 * (self.dp - 1) / self.dp * bytes_)
+
+    def ep_a2a_volume(self) -> float:
+        """Bytes a replica's stage GPUs inject per MoE dispatch (== per
+        combine), aggregated over the TP group: each of the top_k routed
+        token copies leaves the local expert shard with prob. (ep-1)/ep."""
+        if self.ep <= 1 or self.moe_top_k <= 0:
+            return 0.0
+        return float(self.micro_tokens * self.d_model * self.act_bytes
+                     * self.moe_top_k * (self.ep - 1) / self.ep)
+
+    def ep_a2a_stage_volume(self, stage: int) -> float:
+        """Per-direction (fwd or bwd) EP all-to-all bytes for one
+        (replica, microbatch) at `stage`: dispatch + combine for every MoE
+        layer the stage hosts."""
+        if not self.moe_stage_layers:
+            return 0.0
+        return 2.0 * self.moe_stage_layers[stage] * self.ep_a2a_volume()
 
     # -------------------------------------------------------------- durations
     def fwd_duration(self, stage: int) -> float:

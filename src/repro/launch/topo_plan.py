@@ -41,9 +41,12 @@ def main() -> None:
                    microbatches=args.microbatches or None)
     dag = build_comm_dag(job, inter_pod_gbps=args.bandwidth)
     s = dag.summary()
+    ep_note = (f", {s['ep_volume_fraction']:.0%} EP all-to-all"
+               if s["ep_volume_fraction"] > 0 else "")
     print(f"[plan] {args.arch}: tp={job.tp} pp={job.pp} dp={job.dp} "
-          f"mb={job.num_microbatches} -> {s['num_tasks']} inter-pod tasks, "
-          f"{s['num_pods']} pods, {s['total_volume_gb']:.1f} GB/iteration")
+          f"ep={job.ep} mb={job.num_microbatches} -> {s['num_tasks']} "
+          f"inter-pod tasks, {s['num_pods']} pods, "
+          f"{s['total_volume_gb']:.1f} GB/iteration{ep_note}")
 
     methods = [m.strip() for m in args.methods.split(",") if m.strip()]
     bad = set(methods) - set(METHODS)

@@ -1,12 +1,18 @@
 """Variable-length-interval MILP: optimality, consistency, lexicographic
-port minimization, pruning safety, fixed-step cross-check."""
+port minimization, pruning safety, fixed-step cross-check, and the
+independent `validate_solution` checker (aggregate link + NIC classes)."""
+import copy
+
 import numpy as np
 import pytest
 
 from conftest import gpt7b_job
+from repro.core.cluster import ClusterSpec
+from repro.core.dag import CommDAG, CommTask, Dep, make_virtual
 from repro.core.des import DESProblem, simulate
 from repro.core.ga import exhaustive_search
-from repro.core.milp import MILPOptions, solve_delta_milp, validate_solution
+from repro.core.milp import (MILPOptions, MILPResult, solve_delta_milp,
+                             validate_solution)
 from repro.core.milp_fixed import solve_fixed_step
 from repro.core.schedule import build_comm_dag
 
@@ -81,6 +87,68 @@ def test_hot_start_does_not_cut_optimum(dag):
     r_cold = solve_delta_milp(
         dag, MILPOptions(fairness=False, time_limit=90, hot_start=False))
     assert r_hot.makespan == pytest.approx(r_cold.makespan, rel=5e-3)
+
+
+def _two_task_result(tasks, deps, cluster, w, x) -> tuple[CommDAG,
+                                                          MILPResult]:
+    dag = CommDAG(tasks=tasks, deps=deps, cluster=cluster)
+    n = len(tasks)
+    res = MILPResult(x=x, makespan=1.0, status="optimal", solve_time=0.0,
+                     start=np.zeros(n), finish=np.ones(n),
+                     t=np.array([0.0, 1.0]), w=w)
+    return dag, res
+
+
+def test_validate_catches_aggregate_link_violation():
+    """Two tasks each within the per-task link capacity whose *sum*
+    exceeds it: only an aggregate per-(pair, interval) check catches
+    this (the seeded regression for the missing check)."""
+    B = 1e9
+    cluster = ClusterSpec(num_pods=2, port_limits=(2, 2), nic_bandwidth=B)
+    tasks = [make_virtual(),
+             CommTask(1, 0, 1, 1, 0.6 * B, (0,), (100,), kind="rand"),
+             CommTask(2, 0, 1, 1, 0.6 * B, (1,), (101,), kind="rand")]
+    deps = [Dep(0, 1, 0.0), Dep(0, 2, 0.0)]
+    x = np.array([[0, 1], [1, 0]], dtype=np.int64)
+    # one interval of 1 s: each task ships 0.6 GB < 1 GB cap, sum 1.2 GB
+    dag, res = _two_task_result(tasks, deps, cluster,
+                                {(1, 1): 0.6 * B, (2, 1): 0.6 * B}, x)
+    errors = validate_solution(dag, res)
+    assert any("link cap pair" in e for e in errors), errors
+    assert not any("conservation" in e for e in errors)
+    # same volumes over two circuits fit
+    res.x = x * 2
+    assert validate_solution(dag, res) == []
+
+
+def test_validate_catches_nic_class_violation():
+    """Two tasks on different pairs sharing a source GPU: each link is
+    fine but the GPU's NIC injection (Eq. 10) is oversubscribed."""
+    B = 1e9
+    cluster = ClusterSpec(num_pods=3, port_limits=(4, 4, 4),
+                          nic_bandwidth=B)
+    tasks = [make_virtual(),
+             CommTask(1, 0, 1, 1, 0.8 * B, (0,), (100,), kind="rand"),
+             CommTask(2, 0, 2, 1, 0.8 * B, (0,), (200,), kind="rand")]
+    deps = [Dep(0, 1, 0.0), Dep(0, 2, 0.0)]
+    x = np.zeros((3, 3), dtype=np.int64)
+    x[0, 1] = x[1, 0] = x[0, 2] = x[2, 0] = 1
+    dag, res = _two_task_result(tasks, deps, cluster,
+                                {(1, 1): 0.8 * B, (2, 1): 0.8 * B}, x)
+    errors = validate_solution(dag, res)
+    assert any(e.startswith("nic src") for e in errors), errors
+    assert not any("link cap" in e for e in errors)
+
+
+def test_validate_rejects_corrupted_feasible_schedule(dag, joint_result):
+    """A real solved schedule with its volumes inflated must fail the
+    conservation and capacity checks."""
+    assert validate_solution(dag, joint_result) == []
+    bad = copy.deepcopy(joint_result)
+    bad.w = {k: 10.0 * v for k, v in bad.w.items()}
+    errors = validate_solution(dag, bad)
+    assert any("conservation" in e for e in errors)
+    assert any("link cap" in e or e.startswith("nic") for e in errors)
 
 
 def test_infeasible_ports_detected():

@@ -1,0 +1,211 @@
+"""Expert-parallel all-to-all traffic in the comm DAG (MoE workloads).
+
+Covers the EP traffic model end-to-end: task counts / volumes / flows on
+the Table-I MoE workloads, the analytic `ep_a2a_volume()` model, bit-exact
+backward compatibility for ep == 1 jobs, full-vs-reduced projection
+consistency, and a DELTA-Fast end-to-end smoke on a reduced MoE job.
+"""
+import collections
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import one_circuit_topology
+from repro.configs import PAPER_WORKLOADS, REGISTRY, make_job
+from repro.core.cluster import Placement
+from repro.core.des import DESProblem, simulate
+from repro.core.schedule import build_comm_dag
+from repro.core.traffic import JobSpec
+
+
+def moe_job(name: str, mb: int) -> JobSpec:
+    return make_job(PAPER_WORKLOADS[name], microbatches=mb)
+
+
+def tiny_moe_job(**overrides) -> JobSpec:
+    defaults = dict(name="moe-tiny", tp=2, pp=2, dp=2, num_microbatches=3,
+                    micro_tokens=2048, d_model=1024,
+                    stage_params=(1e9, 1e9), gpus_per_pod_per_replica=4,
+                    ep=2, moe_experts=4, moe_top_k=2,
+                    moe_stage_layers=(2, 2))
+    defaults.update(overrides)
+    return JobSpec(**defaults)
+
+
+# ----------------------------------------------------------- volume model
+@pytest.mark.parametrize("name", ["mixtral-8x22b", "deepseek-671b"])
+def test_ep_a2a_volume_matches_analytic_model(name):
+    job = moe_job(name, mb=8)
+    cfg = PAPER_WORKLOADS[name].config
+    expected = (job.micro_tokens * job.d_model * job.act_bytes
+                * cfg.moe_top_k * (job.ep - 1) / job.ep)
+    assert job.ep_a2a_volume() == pytest.approx(expected)
+    # dispatch + combine per MoE layer, per direction
+    for s in range(job.pp):
+        assert job.ep_a2a_stage_volume(s) == pytest.approx(
+            2 * job.moe_stage_layers[s] * expected)
+
+
+@pytest.mark.parametrize("name,mb", [("mixtral-8x22b", 8),
+                                     ("deepseek-671b", 8)])
+def test_ep_a2a_tasks_counts_volumes_flows(name, mb):
+    job = moe_job(name, mb)
+    dag = build_comm_dag(job)
+    kinds = collections.Counter(t.kind for t in dag.real_tasks())
+    n_moe_stages = sum(1 for v in job.moe_stage_layers if v)
+    assert n_moe_stages == job.pp  # every-layer MoE models
+    # representative pair + wraparound image, per (microbatch, MoE stage)
+    assert kinds["ep_a2a_fwd"] == 2 * mb * n_moe_stages
+    assert kinds["ep_a2a_bwd"] == 2 * mb * n_moe_stages
+    agg = 0.0
+    for t in dag.real_tasks():
+        if not t.kind.startswith("ep_a2a"):
+            continue
+        assert t.flows == job.tp
+        stage = t.tag[2]
+        assert t.volume == pytest.approx(job.ep_a2a_stage_volume(stage))
+        assert t.src_pod != t.dst_pod
+        agg += t.volume
+    analytic = 4 * mb * sum(job.ep_a2a_stage_volume(s)
+                            for s in range(job.pp))
+    assert agg == pytest.approx(analytic)
+
+
+def test_moe_workloads_no_longer_dp_only():
+    """The original bug: mixtral/deepseek pipelines fit inside one pod, so
+    their DAGs carried *only* DP traffic and EP was silently dropped."""
+    for name in ("mixtral-8x22b", "deepseek-671b"):
+        dag = build_comm_dag(moe_job(name, 8))
+        frac = dag.ep_volume_fraction()
+        assert frac > 0.2, f"{name}: ep fraction {frac}"
+        kinds = collections.Counter(t.kind for t in dag.real_tasks())
+        assert kinds["dp"] > 0  # DP ring still present
+
+
+def test_registry_moe_workloads_emit_ep_traffic():
+    for name in ("grok-1-314b", "jamba-1.5-large-398b",
+                 "granite-moe-1b-a400m"):
+        dag = build_comm_dag(make_job(REGISTRY[name], microbatches=4))
+        assert dag.ep_volume_fraction() > 0
+
+
+# ------------------------------------------------------- backward compat
+def test_ep1_dag_bit_identical_to_pre_moe_builder():
+    """ep == 1 with MoE metadata present must build exactly the DAG the
+    pre-change builder produced (task list, deps, volumes)."""
+    base = dict(name="gpt7b", tp=2, pp=4, dp=2, num_microbatches=4,
+                micro_tokens=4096, d_model=4096,
+                stage_params=(1.75e9,) * 4, gpus_per_pod_per_replica=4)
+    d_plain = build_comm_dag(JobSpec(**base))
+    d_moe = build_comm_dag(JobSpec(**base, ep=1, moe_experts=8,
+                                   moe_top_k=2, moe_every=1,
+                                   moe_stage_layers=(8,) * 4))
+    assert d_plain.tasks == d_moe.tasks
+    assert d_plain.deps == d_moe.deps
+    assert d_plain.cluster == d_moe.cluster
+
+
+def test_ep1_workloads_have_no_ep_tasks():
+    archs = {**PAPER_WORKLOADS,
+             **{n: REGISTRY[n] for n in ("yi-6b", "qwen2.5-14b",
+                                         "phi3-mini-3.8b",
+                                         "whisper-large-v3")}}
+    for name, arch in archs.items():
+        if arch.plan.ep != 1:
+            continue
+        dag = build_comm_dag(make_job(arch, microbatches=4))
+        assert not any(t.kind.startswith("ep_a2a")
+                       for t in dag.real_tasks()), name
+        assert dag.ep_volume_fraction() == 0.0
+
+
+def test_moe_job_with_ep1_matches_moe_fields_stripped():
+    job = dataclasses.replace(moe_job("mixtral-8x22b", 4), ep=1)
+    stripped = dataclasses.replace(job, moe_experts=0, moe_top_k=0,
+                                   moe_stage_layers=())
+    d1, d2 = build_comm_dag(job), build_comm_dag(stripped)
+    assert d1.tasks == d2.tasks and d1.deps == d2.deps
+
+
+# ------------------------------------------------- projection consistency
+def test_full_vs_reduced_ep_projection_consistent():
+    """ep == dp == 2: the single-replica projection and the full instance
+    must agree on the makespan (same treatment as the DP ring)."""
+    job = tiny_moe_job()
+    d_red = build_comm_dag(job, reduce_replicas=True)
+    d_full = build_comm_dag(job, reduce_replicas=False)
+    m_red = simulate(DESProblem(d_red),
+                     one_circuit_topology(d_red)).makespan
+    m_full = simulate(DESProblem(d_full),
+                      one_circuit_topology(d_full)).makespan
+    assert m_red == pytest.approx(m_full, rel=1e-6)
+
+
+def test_ep_a2a_crosses_pods_despite_single_pod_pipeline():
+    # mixtral: tp*pp == gpus_per_pod_per_replica -> whole replica in one
+    # pod, so PP never crosses pods but the EP a2a must
+    job = moe_job("mixtral-8x22b", 4)
+    assert job.placement().pods_per_replica == 1
+    dag = build_comm_dag(job)
+    kinds = collections.Counter(t.kind for t in dag.real_tasks())
+    assert "pp_fwd" not in kinds
+    assert kinds["ep_a2a_fwd"] > 0
+
+
+# --------------------------------------------------------- placement / EP
+def test_placement_ep_groups_and_spans():
+    p = Placement(tp=2, pp=2, dp=4, gpus_per_pod_per_replica=4, ep=2)
+    assert p.ep_span == 2
+    assert p.ep_groups() == [(0, 1), (2, 3)]
+    pods = p.ep_group_pods((0, 1))
+    assert pods == tuple(sorted({p.pod_of(r, s) for r in (0, 1)
+                                 for s in range(2)}))
+    cluster = p.cluster(nic_bandwidth=50e9)
+    assert cluster.ep_spans == p.ep_spans()
+    assert len(cluster.ep_spans) == 2
+
+
+def test_placement_ep_span_saturates_at_dp():
+    # jamba-style ep > dp: cross-replica span caps at dp
+    p = Placement(tp=2, pp=2, dp=2, gpus_per_pod_per_replica=4, ep=4)
+    assert p.ep_span == 2
+    assert p.ep_groups() == [(0, 1)]
+
+
+def test_bad_ep_configs_rejected():
+    with pytest.raises(ValueError):
+        Placement(tp=2, pp=2, dp=4, gpus_per_pod_per_replica=4, ep=3)
+    with pytest.raises(ValueError):
+        tiny_moe_job(dp=4, ep=3)
+    with pytest.raises(ValueError):
+        tiny_moe_job(moe_stage_layers=(1,))  # needs pp entries
+
+
+def test_ep1_placement_has_no_groups():
+    p = Placement(tp=2, pp=4, dp=2, gpus_per_pod_per_replica=4)
+    assert p.ep_span == 1 and p.ep_groups() == []
+    assert p.cluster(nic_bandwidth=50e9).ep_spans == ()
+
+
+# ------------------------------------------------------------ end to end
+def test_delta_fast_smoke_on_reduced_moe_job():
+    from repro.core.api import optimize
+    from repro.core.ga import GAOptions
+    job = make_job(REGISTRY["granite-moe-1b-a400m"], microbatches=4)
+    dag = build_comm_dag(job)
+    res = optimize(dag, "delta-fast",
+                   ga_options=GAOptions(seed=0, time_limit=15.0,
+                                        patience=10))
+    assert res.feasible
+    assert np.isfinite(res.nct) and res.nct >= 1.0 - 1e-9
+    assert res.total_ports > 0
+
+
+def test_moe_dag_summary_surfaces_traffic_split():
+    dag = build_comm_dag(moe_job("mixtral-8x22b", 4))
+    s = dag.summary()
+    assert 0.0 < s["ep_volume_fraction"] < 1.0
+    by_kind = s["volume_by_kind_gb"]
+    assert by_kind["ep_a2a_fwd"] > 0 and by_kind["ep_a2a_bwd"] > 0
+    assert by_kind["ep_a2a_fwd"] == pytest.approx(by_kind["ep_a2a_bwd"])

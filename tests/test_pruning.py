@@ -4,6 +4,8 @@ import pytest
 from hypothesis import given, settings
 
 from conftest import gpt7b_job, one_circuit_topology, random_comm_dags
+from repro.core.cluster import ClusterSpec
+from repro.core.dag import CommDAG, CommTask, Dep, make_virtual
 from repro.core.des import DESProblem, simulate
 from repro.core.pruning import (cal_task_time_windows, estimate_t_up,
                                 profile_anchors, task_time_index_pruning)
@@ -44,6 +46,23 @@ def test_pruning_reduces_search_space(dag):
     w = task_time_index_pruning(dag, K, anchors)
     dense = dag.num_real_tasks * K
     assert w.num_task_intervals() < 0.3 * dense
+
+
+def test_empty_windows_raise_instead_of_silent_repair():
+    """A rigid-delta chain needing 3 intervals with K=2 is infeasible; the
+    old order (clip into [1, K] *then* check) silently repaired k_max < 1
+    / k_min > K into [1, 1] / [K, K] instead of raising."""
+    tasks = [make_virtual(),
+             CommTask(1, 0, 1, 1, 1e9, (0,), (100,), kind="rand"),
+             CommTask(2, 1, 0, 1, 1e9, (101,), (1,), kind="rand")]
+    deps = [Dep(0, 1, 0.0), Dep(1, 2, 0.01)]  # delta > 0 -> index bump 2
+    cluster = ClusterSpec(num_pods=2, port_limits=(2, 2),
+                          nic_bandwidth=50e9)
+    dag = CommDAG(tasks=tasks, deps=deps, cluster=cluster)
+    with pytest.raises(ValueError, match="empty index windows"):
+        task_time_index_pruning(dag, K=2)
+    w = task_time_index_pruning(dag, K=3)  # K=3 is genuinely feasible
+    assert (w.k_min[1:] <= w.k_max[1:]).all()
 
 
 @settings(max_examples=20, deadline=None)
