@@ -1,0 +1,181 @@
+"""CI benchmark-regression gate.
+
+Compares a fresh smoke run's ``BENCH_<suite>.json`` (under
+``experiments/bench/``) against the committed repo-root baselines and fails
+on regressions, so a PR cannot silently lose the perf wins the baselines
+record (e.g. the vectorized GA speedup or the robust-plan regret):
+
+  * quality metrics (``makespan=...`` / ``worst_regret=...`` inside a row's
+    ``derived`` string): fresh > baseline * (1 + metric_tol) fails
+    (default +20%; these are deterministic seeded quantities);
+  * wall clock (``us_per_call``): fresh > baseline * wall_ratio fails
+    (default 2x, with per-suite overrides because shared CI runners are
+    noisy); rows faster than ``--wall-floor-us`` are skipped entirely;
+  * a fresh suite carrying an ``error`` or missing a baseline row fails.
+
+Usage (exactly what CI runs after the benchmark smoke step):
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline-dir /tmp/bench-baselines --suites des,ga,tab1,robust
+
+ORDERING CAVEAT: ``benchmarks.run`` mirrors every fresh ``BENCH_*.json``
+over the repo-root copies as it finishes, so the committed baselines must
+be snapshotted (or read via ``git show HEAD:BENCH_<suite>.json``) BEFORE
+the smoke run -- gating the repo root after a smoke run compares the
+fresh payload to itself.  CI snapshots to /tmp/bench-baselines first.
+
+Exit status 0 = no regression, 1 = regression (with a per-row diff table).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+METRIC_KEYS = ("makespan", "worst_regret")
+DEFAULT_METRIC_TOL = 0.20      # >20% quality regression fails
+DEFAULT_WALL_RATIO = 2.0       # >2x wall-clock regression fails
+DEFAULT_WALL_FLOOR_US = 10_000.0   # ignore wall noise on sub-10ms rows
+
+# per-suite tolerance overrides: tab1 rows time DAG *builds* (millisecond
+# scale, jittery on shared runners); ga/des/robust time GA/XLA paths whose
+# compile times vary across runner generations.  The committed baselines
+# are produced on the PR author's machine, so the wall gate is a blowup
+# detector, not a precision benchmark: quality metrics (deterministic,
+# seeded) carry the tight 20% bound, wall clock gets generous ratios plus
+# the REPRO_GATE_WALL_SCALE escape hatch for known-slow runners.
+SUITE_TOL: dict[str, dict[str, float]] = {
+    "tab1": {"wall": 5.0},
+    "des": {"wall": 4.0},
+    "ga": {"wall": 4.0},
+    "robust": {"wall": 4.0},
+}
+
+
+def parse_derived(derived: str) -> dict[str, float]:
+    """``k1=v1;k2=v2`` -> {k: float(v)} keeping only float-parsable values."""
+    out: dict[str, float] = {}
+    for part in str(derived).split(";"):
+        if "=" not in part:
+            continue
+        key, _, val = part.partition("=")
+        try:
+            out[key.strip()] = float(val)
+        except ValueError:
+            continue
+    return out
+
+
+def load_suite(path: str) -> dict | None:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare_suite(suite: str, base: dict, fresh: dict, metric_tol: float,
+                  wall_ratio: float, wall_floor_us: float
+                  ) -> tuple[list[str], list[str]]:
+    """Returns (problems, report_lines) for one suite."""
+    tol = SUITE_TOL.get(suite, {})
+    metric_tol = tol.get("metric", metric_tol)
+    wall_scale = float(os.environ.get("REPRO_GATE_WALL_SCALE", "1.0"))
+    wall_ratio = tol.get("wall", wall_ratio) * wall_scale
+    problems: list[str] = []
+    lines: list[str] = []
+
+    if fresh.get("error"):
+        problems.append(f"{suite}: fresh run errored: {fresh['error']}")
+        return problems, lines
+    fresh_rows = {r["name"]: r for r in fresh.get("rows", [])}
+    for brow in base.get("rows", []):
+        name = brow["name"]
+        frow = fresh_rows.get(name)
+        if frow is None:
+            problems.append(f"{suite}: baseline row {name!r} missing "
+                            f"from the fresh run")
+            continue
+        # wall clock -- the floor must consider BOTH sides: a sub-floor
+        # baseline row that blows up to seconds is exactly the regression
+        # the gate exists to catch
+        b_us, f_us = float(brow["us_per_call"]), float(frow["us_per_call"])
+        if max(b_us, f_us) >= wall_floor_us:
+            ratio = f_us / max(b_us, 1e-9)
+            ok = ratio <= wall_ratio
+            lines.append(f"{name:<44} wall_us {b_us:>12.0f} {f_us:>12.0f} "
+                         f"x{ratio:>5.2f}  {'ok' if ok else 'FAIL'}")
+            if not ok:
+                problems.append(
+                    f"{suite}: {name} wall clock {f_us:.0f}us vs baseline "
+                    f"{b_us:.0f}us (x{ratio:.2f} > x{wall_ratio:.2f})")
+        # quality metrics
+        bm = parse_derived(brow.get("derived", ""))
+        fm = parse_derived(frow.get("derived", ""))
+        for key in METRIC_KEYS:
+            if key not in bm:
+                continue
+            if key not in fm:
+                problems.append(f"{suite}: {name} lost metric {key!r}")
+                continue
+            bv, fv = bm[key], fm[key]
+            ok = fv <= bv * (1 + metric_tol) + 1e-12
+            lines.append(f"{name:<44} {key:<8} {bv:>12.6f} {fv:>12.6f} "
+                         f"{'ok' if ok else 'FAIL'}")
+            if not ok:
+                problems.append(
+                    f"{suite}: {name} {key} {fv:.6f} vs baseline "
+                    f"{bv:.6f} (+{(fv / max(bv, 1e-12) - 1) * 100:.1f}% > "
+                    f"+{metric_tol * 100:.0f}%)")
+    return problems, lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=repo_root,
+                    help="committed BENCH_*.json baselines (repo root)")
+    ap.add_argument("--fresh-dir",
+                    default=os.environ.get("REPRO_BENCH_OUT",
+                                           "experiments/bench"),
+                    help="fresh smoke-run output directory")
+    ap.add_argument("--suites", default="des,ga,tab1,robust",
+                    help="comma-separated suites to gate")
+    ap.add_argument("--metric-tol", type=float, default=DEFAULT_METRIC_TOL)
+    ap.add_argument("--wall-ratio", type=float, default=DEFAULT_WALL_RATIO)
+    ap.add_argument("--wall-floor-us", type=float,
+                    default=DEFAULT_WALL_FLOOR_US)
+    args = ap.parse_args(argv)
+
+    problems: list[str] = []
+    for suite in [s.strip() for s in args.suites.split(",") if s.strip()]:
+        fname = f"BENCH_{suite}.json"
+        base = load_suite(os.path.join(args.baseline_dir, fname))
+        fresh = load_suite(os.path.join(args.fresh_dir, fname))
+        if base is None:
+            print(f"# {suite}: no committed baseline ({fname}); skipping")
+            continue
+        if fresh is None:
+            problems.append(f"{suite}: fresh run produced no {fname} "
+                            f"under {args.fresh_dir}")
+            continue
+        suite_problems, lines = compare_suite(
+            suite, base, fresh, args.metric_tol, args.wall_ratio,
+            args.wall_floor_us)
+        print(f"# suite {suite}: {len(base.get('rows', []))} baseline rows, "
+              f"{len(suite_problems)} regression(s)")
+        for line in lines:
+            print("  " + line)
+        problems.extend(suite_problems)
+
+    if problems:
+        print("\nBENCHMARK REGRESSIONS:")
+        for p in problems:
+            print("  - " + p)
+        return 1
+    print("\nno benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,8 +15,6 @@ import json
 import os
 import time
 
-import numpy as np
-
 from repro.configs import PAPER_WORKLOADS, make_job
 from repro.core.api import optimize
 from repro.core.ga import GAOptions

@@ -2,7 +2,6 @@
 the critical flow at its physical bound while fair sharing degrades it."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import Row, bench_dag, milp_opts, save_json
 from repro.core.des import DESProblem, simulate

@@ -8,7 +8,7 @@ import glob
 import json
 import os
 
-from benchmarks.roofline import analyze_cell, markdown_table
+from benchmarks.roofline import markdown_table
 
 DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
 

@@ -1,0 +1,136 @@
+"""DELTA-Robust: one static topology for a Table-I workload mix.
+
+Each mix is a `DagEnsemble` of two phases of a Table-I workload on the same
+cluster (sequence-length change, PP-dominant vs DP-dominant phase,
+microbatch-count change).  For every mix we plan each member alone
+(delta-fast), cross-evaluate the single plans on the *other* member, then
+plan the whole ensemble under both robust objectives -- the headline metric
+is the worst-member regret (makespan / that member's best single-DAG plan):
+a robust plan should stay near 1.0 where either single plan degrades.
+
+All GA runs are generation-bounded with fixed seeds (no wall-clock cutoff),
+so the emitted worst_regret / makespan values are deterministic and gate-able
+by benchmarks/check_regression.py.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, bench_dag, save_json
+from repro.core.cluster import GBPS, ClusterSpec
+from repro.core.dag import DagEnsemble
+from repro.core.des import DESProblem, simulate
+from repro.core.ga import GAOptions, delta_fast, delta_robust
+from repro.core.schedule import build_comm_dag
+from repro.core.traffic import JobSpec
+
+
+def _ga_opts(full: bool, smoke: bool) -> GAOptions:
+    gens = 60 if full else (15 if smoke else 30)
+    return GAOptions(seed=0, pop_size=48 if full else 24,
+                     max_generations=gens, patience=10**9, time_limit=1e9)
+
+
+def _gpt7b(mb: int, **kw) -> JobSpec:
+    defaults = dict(name="gpt7b", tp=2, pp=4, dp=2, num_microbatches=mb,
+                    micro_tokens=4096, d_model=4096,
+                    stage_params=(1.75e9,) * 4,
+                    gpus_per_pod_per_replica=4)
+    defaults.update(kw)
+    return JobSpec(**defaults)
+
+
+def _mixes(full: bool, smoke: bool) -> list[tuple[str, list, list[str]]]:
+    """(mix name, member DAGs, member names); members share a cluster."""
+    mixes = []
+    # 1) gpt-7b at two sequence lengths (traffic-change scenario)
+    mixes.append(("gpt7b-seqlen",
+                  [bench_dag("gpt-7b", seq_len=4096),
+                   bench_dag("gpt-7b", seq_len=16384)],
+                  ["seq4k", "seq16k"]))
+    # 2) contended PP-dominant vs DP-dominant phases on a half-budget
+    # cluster (co-tenant entitlements): the single plans want opposite
+    # port splits, so this is where max-regret visibly beats them
+    cl = ClusterSpec(num_pods=4, port_limits=(5, 5, 5, 5),
+                     nic_bandwidth=400 * GBPS)
+    job_pp = _gpt7b(4, tp=4, gpus_per_pod_per_replica=8, micro_tokens=65536,
+                    stage_params=(0.05e9,) * 4)
+    job_dp = _gpt7b(2, tp=4, gpus_per_pod_per_replica=8, micro_tokens=2048,
+                    stage_params=(8e9,) * 4)
+    mixes.append(("gpt7b-phase",
+                  [build_comm_dag(job_pp, cluster=cl),
+                   build_comm_dag(job_dp, cluster=cl)],
+                  ["pp-phase", "dp-phase"]))
+    if not smoke:
+        # 3) megatron-177b at two microbatch counts (PP/DP ratio shift)
+        mixes.append(("megatron177b-mb",
+                      [bench_dag("megatron-177b", mb=8),
+                       bench_dag("megatron-177b", mb=16)],
+                      ["mb8", "mb16"]))
+    if full:
+        # 4) megatron-462b microbatch phases (paper-scale fabric)
+        mixes.append(("megatron462b-mb",
+                      [bench_dag("megatron-462b", mb=16),
+                       bench_dag("megatron-462b", mb=32)],
+                      ["mb16", "mb32"]))
+    return mixes
+
+
+def run(full: bool = False) -> list[Row]:
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    opts = _ga_opts(full, smoke)
+    rows: list[Row] = []
+    payload: dict = {}
+    for mix_name, dags, names in _mixes(full, smoke):
+        problems = [DESProblem(d) for d in dags]
+        singles, t_single = [], []
+        for dag in dags:
+            t0 = time.time()
+            singles.append(delta_fast(dag, opts))
+            t_single.append(time.time() - t0)
+        refs = np.array([s.makespan for s in singles])
+
+        # cross-evaluation: each single plan on every member
+        cross = np.array([[simulate(p, s.x).makespan for p in problems]
+                          for s in singles])
+        single_worst = (cross / refs).max(axis=1)
+        for name, s, wr, dt in zip(names, singles, single_worst, t_single):
+            rows.append(Row(
+                f"robust/{mix_name}/single/{name}", dt * 1e6,
+                f"makespan={s.makespan:.6f};ports={s.total_ports};"
+                f"worst_regret={wr:.4f}"))
+
+        ensemble = DagEnsemble(list(dags), names=list(names))
+        mix_payload = {
+            "members": names,
+            "refs": refs.tolist(),
+            "cross_regret": (cross / refs).tolist(),
+            "single_ports": [s.total_ports for s in singles],
+        }
+        for objective in ("max-regret", "weighted"):
+            t0 = time.time()
+            rob = delta_robust(ensemble, opts, objective=objective,
+                               refs=refs)
+            dt = time.time() - t0
+            improve = float(single_worst.min() - rob.worst_regret)
+            rows.append(Row(
+                f"robust/{mix_name}/{objective}", dt * 1e6,
+                f"worst_regret={rob.worst_regret:.4f};"
+                f"weighted_makespan={rob.weighted_makespan:.6f};"
+                f"ports={rob.total_ports};"
+                f"improve_vs_best_single={improve:+.4f}"))
+            mix_payload[objective] = {
+                "worst_regret": rob.worst_regret,
+                "regrets": rob.regrets.tolist(),
+                "makespans": rob.makespans.tolist(),
+                "ports": rob.total_ports,
+                "generations": rob.generations,
+                "evaluations": rob.evaluations,
+                "seconds": dt,
+            }
+        payload[mix_name] = mix_payload
+    save_json("robust_bench", payload)
+    return rows

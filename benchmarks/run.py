@@ -23,7 +23,7 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 SUITES = ("tab1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-          "fleet", "kernels", "des", "ga", "roofline")
+          "fleet", "kernels", "des", "ga", "robust", "roofline")
 
 
 def main() -> None:
@@ -39,15 +39,17 @@ def main() -> None:
     from benchmarks import (des_bench, fig6_bandwidth, fig7_rates,
                             fig8_seqlen, fig9_ports, fig10_realloc,
                             fig11_exectime, fleet_bench, ga_bench,
-                            kernels_bench, roofline, tab1_workloads)
+                            kernels_bench, robust_bench, roofline,
+                            tab1_workloads)
     from benchmarks.common import OUT_DIR, save_json
 
     modules = {"tab1": tab1_workloads, "fig6": fig6_bandwidth,
                "fig7": fig7_rates, "fig8": fig8_seqlen,
                "fig9": fig9_ports, "fig10": fig10_realloc,
                "fig11": fig11_exectime, "fleet": fleet_bench,
-               "kernels": kernels_bench,
-               "des": des_bench, "ga": ga_bench, "roofline": roofline}
+               "kernels": kernels_bench, "des": des_bench,
+               "ga": ga_bench, "robust": robust_bench,
+               "roofline": roofline}
 
     print("name,us_per_call,derived")
     lines = ["name,us_per_call,derived"]

@@ -1,7 +1,10 @@
-"""DELTA facade: one entry point for the six algorithms of Sec. V-A2.
+"""DELTA facade: one entry point for the six algorithms of Sec. V-A2,
+plus the multi-DAG robust formulation.
 
     plan = optimize(dag, method="delta-joint", port_min=True)
     report = compare(dag)      # all six, ready for the Fig. 6/8 benchmarks
+    robust = optimize_ensemble(DagEnsemble([dagA, dagB]),
+                               objective="max-regret")
 
 Methods:
   prop-alloc | sqrt-alloc | iter-halve    traffic-matrix baselines
@@ -9,6 +12,11 @@ Methods:
   delta-topo                              MILP + fairness (Eq. 17)
   delta-joint                             MILP, joint topology + rates
   delta-joint-hotstart                    delta-joint seeded by delta-fast
+  delta-robust                            GA over a DagEnsemble (one static
+                                          topology for a set of DAGs; on a
+                                          single CommDAG it reduces to the
+                                          delta-fast path)
+  delta-robust-milp                       shared-x multi-member MILP
 """
 from __future__ import annotations
 
@@ -19,16 +27,19 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.baselines import BASELINES
-from repro.core.dag import VIRTUAL, CommDAG
+from repro.core.dag import VIRTUAL, CommDAG, DagEnsemble
 from repro.core.des import DESProblem, DESResult, simulate
-from repro.core.ga import GAOptions, GAResult, delta_fast
-from repro.core.milp import MILPOptions, MILPResult, solve_delta_milp
+from repro.core.ga import (GAOptions, GAResult, delta_fast, delta_robust,
+                           ROBUST_OBJECTIVES)
+from repro.core.milp import (MILPOptions, MILPResult, solve_delta_milp,
+                             solve_robust_milp)
 
 INF = float("inf")
 
 METHODS = ("prop-alloc", "sqrt-alloc", "iter-halve",
            "delta-fast", "delta-topo", "delta-joint",
-           "delta-joint-hotstart")
+           "delta-joint-hotstart", "delta-robust")
+ROBUST_METHODS = ("delta-robust", "delta-robust-milp")
 
 
 @dataclass
@@ -82,6 +93,18 @@ def optimize(dag: CommDAG, method: str = "delta-fast",
     problem = DESProblem(dag)
     ideal = ideal_result or _ideal(problem)
     t0 = time.time()
+
+    if method == "delta-robust":
+        # singleton ensemble: the weighted objective degenerates to the
+        # plain makespan, so this IS the delta-fast path (same RNG stream)
+        eres = optimize_ensemble(DagEnsemble.singleton(dag),
+                                 method="delta-robust", objective="weighted",
+                                 refs=np.array([max(ideal.makespan, 1e-12)]),
+                                 ga_options=ga_options)
+        elapsed = time.time() - t0
+        out = _from_des(dag, problem, method, eres.x, elapsed, ideal)
+        out.details.update(eres.details)
+        return out
 
     if method in BASELINES:
         x = BASELINES[method](dag)
@@ -172,6 +195,105 @@ def compare(dag: CommDAG, methods=METHODS[:6], **kw) -> dict[str, PlanResult]:
     problem = DESProblem(dag)
     ideal = _ideal(problem)
     return {m: optimize(dag, m, ideal_result=ideal, **kw) for m in methods}
+
+
+# ------------------------------------------------------------- DELTA-Robust
+@dataclass
+class EnsemblePlanResult:
+    """One static topology scored against every member of a DagEnsemble."""
+
+    method: str
+    objective: str
+    x: np.ndarray
+    member_names: list[str]
+    weights: np.ndarray
+    makespans: np.ndarray          # (M,) exact fair-share DES makespans
+    refs: np.ndarray               # (M,) reference makespans (regret = 1)
+    regrets: np.ndarray            # (M,) makespans / refs
+    elapsed: float
+    feasible: bool = True
+    details: dict = field(default_factory=dict)
+
+    @property
+    def worst_regret(self) -> float:
+        return float(self.regrets.max()) if len(self.regrets) else INF
+
+    @property
+    def weighted_makespan(self) -> float:
+        return float(self.makespans @ self.weights)
+
+    @property
+    def total_ports(self) -> int:
+        return int(self.x.sum())
+
+
+def evaluate_on_ensemble(ensemble: DagEnsemble, x: np.ndarray) -> np.ndarray:
+    """Exact fair-share DES makespan of topology `x` on every member (INF
+    where infeasible) -- the cross-evaluation used for regret reporting."""
+    return np.array([simulate(DESProblem(m), np.asarray(x)).makespan
+                     for m in ensemble.members])
+
+
+def optimize_ensemble(ensemble: DagEnsemble, method: str = "delta-robust",
+                      objective: str = "max-regret",
+                      refs: np.ndarray | None = None,
+                      ga_options: GAOptions | None = None,
+                      milp_options: MILPOptions | None = None
+                      ) -> EnsemblePlanResult:
+    """DELTA-Robust entry point: one port allocation for a set of DAGs.
+
+    `refs` define regret (makespan / ref per member); when omitted they
+    are the members' best single-DAG `delta-fast` plans computed here with
+    the same `ga_options` (their plan makespans are also the natural
+    baseline to report robust regret against).
+    """
+    if method not in ROBUST_METHODS:
+        raise ValueError(
+            f"unknown method {method!r}; pick from {ROBUST_METHODS}")
+    if objective not in ROBUST_OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"pick from {ROBUST_OBJECTIVES}")
+    t0 = time.time()
+    details: dict = {}
+    if refs is None:
+        singles = [delta_fast(m, ga_options) for m in ensemble.members]
+        refs = np.array([s.makespan for s in singles])
+        details["single_plan_ports"] = [s.total_ports for s in singles]
+        details["single_plan_x"] = [s.x for s in singles]
+    refs = np.asarray(refs, dtype=np.float64)
+
+    if method == "delta-robust":
+        res = delta_robust(ensemble, ga_options, objective=objective,
+                           refs=refs)
+        x, makespans, feasible = res.x, res.makespans, res.feasible
+        details.update(generations=res.generations,
+                       evaluations=res.evaluations,
+                       objective_value=res.objective_value)
+    else:
+        # honour the caller's fairness choice: MILPOptions(fairness=True)
+        # yields the Eq. 17 fair-share robust variant (the delta-topo
+        # analog), the default the joint-rate one (the delta-joint analog)
+        opts = dataclasses.replace(milp_options) if milp_options \
+            else MILPOptions()
+        res = solve_robust_milp(ensemble, opts, objective=objective,
+                                refs=refs)
+        # a time-limited schedule can carry slack; the shared topology is
+        # at least as good as its fair-share execution (cf. `optimize`)
+        des_ms = evaluate_on_ensemble(ensemble, res.x)
+        makespans = np.minimum(res.makespans, des_ms) if res.feasible \
+            else des_ms
+        x, feasible = res.x, bool(np.isfinite(makespans).all())
+        details.update(milp_status=res.status, solve_time=res.solve_time,
+                       objective_value=res.objective_value,
+                       stats=res.stats)
+    with np.errstate(invalid="ignore"):
+        regrets = makespans / refs
+    return EnsemblePlanResult(
+        method=method, objective=objective, x=x,
+        member_names=list(ensemble.names),
+        weights=np.asarray(ensemble.weights), makespans=makespans,
+        refs=refs, regrets=regrets, elapsed=time.time() - t0,
+        feasible=feasible, details=details)
 
 
 def fleet_optimize(requests, num_pods: int | None = None,

@@ -243,6 +243,132 @@ class CommDAG:
         }
 
 
+@dataclass
+class DagEnsemble:
+    """A *set* of reduced CommDAGs sharing one physical cluster.
+
+    The robust formulation (DELTA-Robust): OCS reconfiguration overhead
+    forces one static logical topology to serve several workloads --
+    co-tenant mixes, training phases, Model/Model^T placements, traffic
+    growth scenarios.  An ensemble holds the named member DAGs, their
+    mixture weights (normalized to sum 1) and the shared `ClusterSpec`
+    every member must agree on (same pods, port budgets and NIC bandwidth;
+    otherwise one port allocation cannot serve them all).
+
+    `weights` drive the `weighted` objective; the `max-regret` objective
+    ignores them and minimizes max_m makespan_m / ref_m where ref_m is
+    member m's best single-DAG plan (see `repro.core.ga.delta_robust`).
+    """
+
+    members: list[CommDAG]
+    names: list[str] = field(default_factory=list)
+    weights: np.ndarray = None  # type: ignore[assignment]
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.members:
+            raise ValueError("DagEnsemble needs at least one member DAG")
+        if not self.names:
+            # auto-derived names: phases of the same job share meta["job"],
+            # so disambiguate collisions with a positional suffix
+            raw = [m.meta.get("job", f"member{i}")
+                   for i, m in enumerate(self.members)]
+            self.names = [n if raw.count(n) == 1 else f"{n}[{i}]"
+                          for i, n in enumerate(raw)]
+        if len(self.names) != len(self.members):
+            raise ValueError(
+                f"{len(self.names)} names for {len(self.members)} members")
+        if len(set(self.names)) != len(self.names):
+            raise ValueError(f"duplicate member names: {self.names}")
+        if self.weights is None:
+            self.weights = np.ones(len(self.members))
+        self.weights = np.asarray(self.weights, dtype=np.float64)
+        if self.weights.shape != (len(self.members),):
+            raise ValueError("weights must have one entry per member")
+        if (self.weights <= 0).any():
+            raise ValueError("weights must be positive")
+        self.weights = self.weights / self.weights.sum()
+        ref = self.members[0].cluster
+        for name, m in zip(self.names, self.members):
+            cl = m.cluster
+            if (cl.num_pods != ref.num_pods
+                    or tuple(cl.port_limits) != tuple(ref.port_limits)
+                    or cl.nic_bandwidth != ref.nic_bandwidth):
+                raise ValueError(
+                    f"member {name!r} disagrees with the shared cluster: "
+                    f"{cl.num_pods} pods / {cl.port_limits} ports / "
+                    f"B={cl.nic_bandwidth:g} vs {ref.num_pods} / "
+                    f"{ref.port_limits} / B={ref.nic_bandwidth:g}")
+
+    # ------------------------------------------------------------------ basic
+    @classmethod
+    def singleton(cls, dag: CommDAG, name: str | None = None,
+                  ) -> "DagEnsemble":
+        return cls(members=[dag],
+                   names=[name] if name is not None else [])
+
+    @property
+    def num_members(self) -> int:
+        return len(self.members)
+
+    @property
+    def cluster(self) -> ClusterSpec:
+        return self.members[0].cluster
+
+    def __iter__(self) -> Iterator[tuple[str, float, CommDAG]]:
+        return iter(zip(self.names, self.weights, self.members))
+
+    def member(self, name: str) -> CommDAG:
+        return self.members[self.names.index(name)]
+
+    # ------------------------------------------------------------ union views
+    def undirected_pairs(self) -> list[tuple[int, int]]:
+        """Union of the members' active undirected pod pairs -- the genome /
+        x-variable support of one shared topology."""
+        pairs: set[tuple[int, int]] = set()
+        for m in self.members:
+            pairs.update(m.undirected_pairs())
+        return sorted(pairs)
+
+    def pod_pairs(self) -> list[tuple[int, int]]:
+        pairs: set[tuple[int, int]] = set()
+        for m in self.members:
+            pairs.update(m.pod_pairs())
+        return sorted(pairs)
+
+    def traffic_matrix(self) -> np.ndarray:
+        """Weight-averaged union traffic matrix (what a TM-based robust
+        baseline would see)."""
+        tm = np.zeros((self.cluster.num_pods,) * 2)
+        for w, m in zip(self.weights, self.members):
+            tm += w * m.traffic_matrix()
+        return tm
+
+    # -------------------------------------------------------------- profiles
+    def ideal_makespans(self) -> np.ndarray:
+        """Per-member makespan on an ideal non-blocking network (the NCT
+        denominators; a lower bound on any ref used for regret)."""
+        from repro.core.des import DESProblem, simulate  # no import cycle
+
+        out = np.empty(self.num_members)
+        P = self.cluster.num_pods
+        for i, m in enumerate(self.members):
+            res = simulate(DESProblem(m), np.zeros((P, P)), ideal=True)
+            out[i] = res.makespan
+        return out
+
+    def summary(self) -> dict:
+        return {
+            "members": {
+                name: {"weight": float(w), **dag.summary()}
+                for name, w, dag in self
+            },
+            "num_pods": self.cluster.num_pods,
+            "union_pairs": len(self.undirected_pairs()),
+            "total_volume_gb": float(self.traffic_matrix().sum() / 1e9),
+        }
+
+
 def merge_parallel_deps(deps: Iterable[Dep]) -> list[Dep]:
     """Keep only the max-delta edge for duplicated (pre, succ) pairs."""
     best: dict[tuple[int, int], float] = {}

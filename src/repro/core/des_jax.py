@@ -35,6 +35,7 @@ class DESArrays(NamedTuple):
     con_w: jax.Array           # (e,) weight on phi (F_m for links, 1 for NIC)
     link_pair_a: jax.Array     # (L,) src pod per link constraint
     link_pair_b: jax.Array     # (L,) dst pod per link constraint
+    task_valid: jax.Array    # (n,) False for ensemble-padding ghost tasks
     num_cons: int
     num_link_cons: int
     nic_bandwidth: float
@@ -62,6 +63,7 @@ class DESArrays(NamedTuple):
             con_w=jnp.asarray(problem.con_w),
             link_pair_a=jnp.asarray(pairs[:, 0], dtype=jnp.int32),
             link_pair_b=jnp.asarray(pairs[:, 1], dtype=jnp.int32),
+            task_valid=jnp.ones(problem.n, dtype=bool),
             num_cons=problem.num_cons,
             num_link_cons=problem.num_link_cons,
             nic_bandwidth=1.0,   # rescaled (see volume)
@@ -116,12 +118,15 @@ def _simulate(arr: DESArrays, x: jax.Array, ideal_flag: jax.Array,
     caps = jnp.concatenate(
         [link_caps, jnp.full(arr.num_cons - arr.num_link_cons, B)])
 
-    # initial state: virtual task 0 done at t=0
+    # initial state: virtual task 0 done at t=0.  Padding ghost tasks
+    # (task_valid False -- ensemble members stacked to a common shape) are
+    # born done with finish 0, so they never contend, never gate readiness
+    # and never contribute to the makespan.
     rem = arr.volume
-    started = jnp.zeros(n, dtype=bool).at[0].set(True)
-    done = jnp.zeros(n, dtype=bool).at[0].set(True)
-    start = jnp.full(n, INF).at[0].set(0.0)
-    finish = jnp.full(n, INF).at[0].set(0.0)
+    started = jnp.logical_not(arr.task_valid).at[0].set(True)
+    done = started
+    start = jnp.where(started, 0.0, INF)
+    finish = start
     missing = arr.indegree - jax.ops.segment_sum(
         (arr.dep_pre == 0).astype(jnp.int32), arr.dep_succ, num_segments=n)
     t = jnp.array(0.0)
@@ -240,3 +245,147 @@ class JaxDES:
             jnp.asarray(edge_u, dtype=jnp.int32),
             jnp.asarray(edge_v, dtype=jnp.int32))
         return np.asarray(ms), np.asarray(feas)
+
+
+# ------------------------------------------------------------------ ensemble
+def _pad_to(a: np.ndarray, size: int, fill) -> np.ndarray:
+    """Right-pad a 1-D array to `size` with `fill`."""
+    if len(a) == size:
+        return np.asarray(a)
+    out = np.full(size, fill, dtype=np.asarray(a).dtype)
+    out[:len(a)] = a
+    return out
+
+
+def stack_problems(problems: list[DESProblem]) -> DESArrays:
+    """Pad member DES problems to one fixed shape and stack them.
+
+    Every array field gains a leading member axis; the static shape fields
+    take the across-member maxima so a single jitted `_simulate` serves all
+    members (vmap over the member axis).  Padding semantics:
+
+      * ghost tasks: volume 0, flows 1, `task_valid` False -- born done,
+        never scheduled (see `_simulate`);
+      * ghost deps: (0 -> 0, delta 0) -- target the virtual task, which is
+        done at t=0, so they never gate readiness;
+      * ghost incidence entries: (task 0, constraint 0, weight 0) -- zero
+        contribution to every used/denom segment sum;
+      * ghost link constraints: pair (0, 0) -- capacity x[0,0] * B == 0
+        with no members, never binding;
+      * ghost NIC constraints: capacity B with no members, never binding.
+
+    Constraint ids are remapped so every member's NIC block starts at the
+    common padded link count L_max (the caps vector in `_simulate` is
+    [links..., NICs...] by position).
+    """
+    if not problems:
+        raise ValueError("stack_problems needs at least one member")
+    n_max = max(p.n for p in problems)
+    d_max = max(len(p.dep_pre) for p in problems)
+    e_max = max(len(p.con_task) for p in problems)
+    l_max = max(p.num_link_cons for p in problems)
+    c_max = l_max + max(p.num_cons - p.num_link_cons for p in problems)
+    B = problems[0].B
+    if any(p.B != B for p in problems):
+        raise ValueError("ensemble members must share the NIC bandwidth")
+
+    fields: dict[str, list[np.ndarray]] = {k: [] for k in (
+        "volume", "flows", "dep_pre", "dep_succ", "dep_delta", "indegree",
+        "con_task", "con_id", "con_w", "link_pair_a", "link_pair_b",
+        "task_valid")}
+    for p in problems:
+        cp = p.con_ptr
+        con_id = np.repeat(np.arange(p.num_cons), np.diff(cp))
+        # NIC constraints shift up to start at the padded link block end
+        con_id = np.where(con_id >= p.num_link_cons,
+                          con_id + (l_max - p.num_link_cons), con_id)
+        pairs = np.array(p.pairs, dtype=np.int32).reshape(-1, 2)
+        if p.volume[1:].min(initial=np.inf) <= 0:
+            raise ValueError("JAX DES requires positive real-task volumes")
+        fields["volume"].append(_pad_to(p.volume / B, n_max, 0.0))
+        fields["flows"].append(_pad_to(p.flows, n_max, 1.0))
+        fields["dep_pre"].append(
+            _pad_to(p.dep_pre.astype(np.int32), d_max, 0))
+        fields["dep_succ"].append(
+            _pad_to(p.dep_succ.astype(np.int32), d_max, 0))
+        fields["dep_delta"].append(_pad_to(p.dep_delta, d_max, 0.0))
+        fields["indegree"].append(
+            _pad_to(p.indegree.astype(np.int32), n_max, 0))
+        fields["con_task"].append(
+            _pad_to(p.con_task.astype(np.int32), e_max, 0))
+        fields["con_id"].append(_pad_to(con_id.astype(np.int32), e_max, 0))
+        fields["con_w"].append(_pad_to(p.con_w, e_max, 0.0))
+        fields["link_pair_a"].append(_pad_to(pairs[:, 0], l_max, 0))
+        fields["link_pair_b"].append(_pad_to(pairs[:, 1], l_max, 0))
+        fields["task_valid"].append(
+            _pad_to(np.ones(p.n, dtype=bool), n_max, False))
+    stacked = {k: jnp.asarray(np.stack(v)) for k, v in fields.items()}
+    return DESArrays(**stacked, num_cons=c_max, num_link_cons=l_max,
+                     nic_bandwidth=1.0, n=n_max)
+
+
+class EnsembleJaxDES:
+    """Batched DES over a `DagEnsemble`: members x genomes in one jit.
+
+    Member problems are padded to a fixed shape (`stack_problems`) so GA
+    fitness over a whole population stays O(1) host<->device transfers per
+    generation regardless of ensemble size: one (pop, E) genome upload, one
+    (pop, M) (makespan, feasible) download.
+    """
+
+    def __init__(self, problems: list[DESProblem],
+                 max_events: int | None = None):
+        self.problems = problems
+        self.arrays = stack_problems(problems)
+        self.max_events = int(max_events
+                              or (4 * max(p.n for p in problems) + 8))
+        self.P = problems[0].dag.cluster.num_pods
+
+    # array-valued DESArrays leaves: everything before the first static
+    # field, derived from the NamedTuple itself so a future field
+    # insertion/reorder cannot silently misalign the vmap reassembly
+    _ARRAY_FIELDS = DESArrays._fields[:DESArrays._fields.index("num_cons")]
+
+    def _member_arrays(self) -> tuple:
+        """The stacked array leaves (leading member axis) for vmap."""
+        return tuple(getattr(self.arrays, f) for f in self._ARRAY_FIELDS)
+
+    def _rebuild(self, leaves: tuple) -> DESArrays:
+        """One member's DESArrays from its vmapped leaves + the shared
+        static fields (kept by `_replace`)."""
+        return self.arrays._replace(**dict(zip(self._ARRAY_FIELDS, leaves)))
+
+    @functools.cached_property
+    def _batched_genomes(self):
+        me, P = self.max_events, self.P
+        rebuild = self._rebuild
+
+        def one_member(leaves, x):
+            return _simulate(rebuild(leaves), x, jnp.asarray(False), me)[:2]
+
+        def one_genome(leaves, g, eu, ev):
+            x = jnp.zeros((P, P), dtype=g.dtype)
+            x = x.at[eu, ev].set(g).at[ev, eu].set(g)
+            return jax.vmap(one_member, in_axes=(0, None))(leaves, x)
+
+        return jax.jit(jax.vmap(one_genome, in_axes=(None, 0, None, None)))
+
+    def ensemble_genome_makespan(self, genomes, edge_u, edge_v
+                                 ) -> tuple[np.ndarray, np.ndarray]:
+        """(pop, E) genomes over the union pairs -> (pop, M) makespans and
+        feasibility, one fused jitted call (scatter + members x genomes
+        vmap'd `_simulate`)."""
+        ms, feas = self._batched_genomes(
+            self._member_arrays(), jnp.asarray(genomes),
+            jnp.asarray(edge_u, dtype=jnp.int32),
+            jnp.asarray(edge_v, dtype=jnp.int32))
+        return np.asarray(ms), np.asarray(feas)
+
+    def makespans(self, x) -> tuple[np.ndarray, np.ndarray]:
+        """Per-member (makespan, feasible) for one symmetric (P, P)
+        topology, via the genome entry point (full-matrix scatter)."""
+        eu = np.arange(self.P).repeat(self.P)
+        ev = np.tile(np.arange(self.P), self.P)
+        genome = np.asarray(x).reshape(-1)[None]
+        ms, feas = self.ensemble_genome_makespan(genome, eu, ev)
+        return ms[0], feas[0]

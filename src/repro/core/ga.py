@@ -29,7 +29,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.dag import CommDAG
+from repro.core.dag import CommDAG, DagEnsemble
 from repro.core.des import DESProblem, simulate
 from repro.core.xbound import x_upper_bound
 
@@ -77,14 +77,32 @@ class TopologySpace:
 
     def __init__(self, dag: CommDAG, xbar: np.ndarray | None = None):
         self.dag = dag
-        self.P = dag.cluster.num_pods
-        self.U = np.asarray(dag.cluster.port_limits, dtype=np.int64)
-        self.edges = dag.undirected_pairs()
+        xbar_m = np.asarray(xbar if xbar is not None else x_upper_bound(dag))
+        self._setup(dag.cluster, dag.undirected_pairs(), xbar_m)
+
+    @classmethod
+    def for_ensemble(cls, ensemble: DagEnsemble,
+                     xbar: np.ndarray | None = None) -> "TopologySpace":
+        """Search space over the *union* of the members' active pairs.
+
+        Per-pair capacity bound: the member-wise max of the Alg. 2 bounds
+        (a circuit count useful to any member must stay reachable)."""
+        obj = cls.__new__(cls)
+        obj.dag = None
+        xbar_m = np.asarray(xbar if xbar is not None
+                            else ensemble_x_upper_bound(ensemble))
+        obj._setup(ensemble.cluster, ensemble.undirected_pairs(), xbar_m)
+        return obj
+
+    def _setup(self, cluster, edges: list[tuple[int, int]],
+               xbar_m: np.ndarray) -> None:
+        self.P = cluster.num_pods
+        self.U = np.asarray(cluster.port_limits, dtype=np.int64)
+        self.edges = edges
         self.E = len(self.edges)
         earr = np.asarray(self.edges, dtype=np.int64).reshape(-1, 2)
         self.edge_u = earr[:, 0]
         self.edge_v = earr[:, 1]
-        xbar_m = np.asarray(xbar if xbar is not None else x_upper_bound(dag))
         self.xbar = np.maximum(
             1, np.minimum(xbar_m[self.edge_u, self.edge_v].astype(np.int64),
                           np.minimum(self.U[self.edge_u],
@@ -191,52 +209,37 @@ class TopologySpace:
         return G[0], bool(ok[0])
 
 
-class BatchedFitness:
-    """Population fitness: vectorized dedup + cache + one batched DES call.
+class _CachedFitness:
+    """Shared population-fitness plumbing for the single-DAG and ensemble
+    engines: vectorized `np.unique` dedup backed by a bytes-keyed score
+    cache, fixed-shape padding (a multiple of `pop_size`, so the jitted
+    batch compiles once and every generation does O(1) host<->device
+    transfers), and the lexicographic port penalty.  Subclasses provide
+    `_raw_scores` mapping unique (S, E) genomes to makespan-like scores
+    (lower is better, INF marks infeasible)."""
 
-    Each call takes the whole (S, E) population, dedups it with
-    `np.unique(axis=0)`, looks unique rows up in a bytes-keyed cache, and
-    evaluates only the misses -- on the jax backend through the fused
-    genome-scatter + vmap-DES entry point, padded to a multiple of
-    `pop_size` so the XLA computation compiles once and every generation
-    does O(1) host<->device transfers instead of O(pop)."""
-
-    def __init__(self, dag: CommDAG, space: TopologySpace, opts: GAOptions):
-        self.problem = DESProblem(dag)
+    def __init__(self, space: TopologySpace, opts: GAOptions, n_tasks: int):
         self.space = space
         self.opts = opts
         self.cache: dict[bytes, float] = {}
         self.evaluations = 0
         self.batch_calls = 0
-        use_jax = opts.backend == "jax" or (
-            opts.backend == "auto"
-            and self.problem.n <= opts.jax_task_limit)
-        self._jd = None
-        if use_jax and space.E > 0:
-            try:
-                from repro.core.des_jax import JaxDES
-                self._jd = JaxDES(self.problem)
-            except Exception:   # pragma: no cover - jax always available here
-                self._jd = None
+        self._use_jax = opts.backend == "jax" or (
+            opts.backend == "auto" and n_tasks <= opts.jax_task_limit)
         self._pad = max(int(opts.pop_size), 1)
 
-    def _raw_makespans(self, genomes: np.ndarray) -> np.ndarray:
-        """Makespan (INF if infeasible) for each unique genome row."""
-        if self._jd is not None:
-            k = len(genomes)
-            # fixed batch shape (pop_size): XLA compiles the generation step
-            # exactly once; extra lanes are near-free on the batched
-            # while_loop, whose cost is dominated by the max-lane trip count
-            pad = (-k) % self._pad
-            if pad:
-                genomes = np.concatenate(
-                    [genomes, np.repeat(genomes[:1], pad, axis=0)])
-            ms, feas = self._jd.batch_genome_makespan(
-                genomes, self.space.edge_u, self.space.edge_v)
-            self.batch_calls += 1
-            return np.where(feas, ms, INF)[:k]
-        return np.array([simulate(self.problem, x).makespan
-                         for x in self.space.to_matrix_batch(genomes)])
+    def _padded(self, genomes: np.ndarray) -> tuple[np.ndarray, int]:
+        """Pad to the fixed batch shape; extra lanes are near-free on the
+        batched while_loop, whose cost is the max-lane trip count."""
+        k = len(genomes)
+        pad = (-k) % self._pad
+        if pad:
+            genomes = np.concatenate(
+                [genomes, np.repeat(genomes[:1], pad, axis=0)])
+        return genomes, k
+
+    def _raw_scores(self, genomes: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
 
     def __call__(self, population: np.ndarray) -> np.ndarray:
         G = np.ascontiguousarray(
@@ -247,7 +250,7 @@ class BatchedFitness:
         miss = [i for i, key in enumerate(keys) if key not in self.cache]
         if miss:
             self.evaluations += len(miss)
-            vals = self._raw_makespans(uniq[miss])
+            vals = self._raw_scores(uniq[miss])
             sums = uniq[miss].sum(axis=1)
             for i, v, s in zip(miss, vals, sums):
                 score = float(v)
@@ -255,6 +258,35 @@ class BatchedFitness:
                     score += self.opts.port_weight * float(s)
                 self.cache[keys[i]] = score
         return np.array([self.cache[k] for k in keys])[inv]
+
+
+class BatchedFitness(_CachedFitness):
+    """Single-DAG fitness: one fused genome-scatter + vmap-DES call per
+    generation on the jax backend (`JaxDES.batch_genome_makespan`)."""
+
+    def __init__(self, dag: CommDAG, space: TopologySpace, opts: GAOptions):
+        self.problem = DESProblem(dag)
+        super().__init__(space, opts, self.problem.n)
+        self._jd = None
+        if self._use_jax and space.E > 0:
+            try:
+                from repro.core.des_jax import JaxDES
+                self._jd = JaxDES(self.problem)
+            except Exception:   # pragma: no cover - jax always available here
+                self._jd = None
+
+    def _raw_makespans(self, genomes: np.ndarray) -> np.ndarray:
+        """Makespan (INF if infeasible) for each unique genome row."""
+        if self._jd is not None:
+            genomes, k = self._padded(genomes)
+            ms, feas = self._jd.batch_genome_makespan(
+                genomes, self.space.edge_u, self.space.edge_v)
+            self.batch_calls += 1
+            return np.where(feas, ms, INF)[:k]
+        return np.array([simulate(self.problem, x).makespan
+                         for x in self.space.to_matrix_batch(genomes)])
+
+    _raw_scores = _raw_makespans
 
 
 # backwards-compatible alias (pre-vectorization name)
@@ -284,23 +316,15 @@ def _variation_batch(pop: np.ndarray, fitness: np.ndarray,
     return np.clip(children + np.where(mut, step, 0), 1, space.xbar)
 
 
-def delta_fast(dag: CommDAG, opts: GAOptions | None = None,
-               xbar: np.ndarray | None = None,
-               seeds: list[np.ndarray] | None = None) -> GAResult:
-    """Alg. 3: SimBasedDomainAdaptedGA (population-array-resident)."""
-    opts = opts or GAOptions()
-    rng = np.random.default_rng(opts.seed)
-    space = TopologySpace(dag, xbar)
-    fit = BatchedFitness(dag, space, opts)
-    t0 = time.time()
-
-    if space.E == 0:    # no inter-pod traffic: the empty topology is optimal
-        x = np.zeros((space.P, space.P), dtype=np.int64)
-        ms = simulate(fit.problem, x).makespan
-        return GAResult(x=x, makespan=float(ms), generations=0,
-                        evaluations=1, elapsed=time.time() - t0,
-                        history=[float(ms)], feasible=np.isfinite(ms))
-
+def _evolve(space: TopologySpace, fit, opts: GAOptions,
+            rng: np.random.Generator, t0: float,
+            seeds: list[np.ndarray] | None = None
+            ) -> tuple[np.ndarray, float, list[float], int]:
+    """The shared GA driver (Alg. 3 body): init + repair + generational
+    loop, fitness-agnostic.  `fit` maps a (S, E) population to (S,) scores
+    (lower is better); both `delta_fast` and `delta_robust` route through
+    this exact loop, so a singleton ensemble consumes the RNG identically
+    to the single-DAG path.  Returns (best_g, best_f, history, gen)."""
     pop = space.random_init_batch(rng, opts.pop_size)
     # seed candidates (e.g. baselines) -- repaired into the population
     for s in (seeds or []):
@@ -333,6 +357,27 @@ def delta_fast(dag: CommDAG, opts: GAOptions | None = None,
         else:
             stall += 1
         history.append(best_f)
+    return best_g, best_f, history, gen
+
+
+def delta_fast(dag: CommDAG, opts: GAOptions | None = None,
+               xbar: np.ndarray | None = None,
+               seeds: list[np.ndarray] | None = None) -> GAResult:
+    """Alg. 3: SimBasedDomainAdaptedGA (population-array-resident)."""
+    opts = opts or GAOptions()
+    rng = np.random.default_rng(opts.seed)
+    space = TopologySpace(dag, xbar)
+    fit = BatchedFitness(dag, space, opts)
+    t0 = time.time()
+
+    if space.E == 0:    # no inter-pod traffic: the empty topology is optimal
+        x = np.zeros((space.P, space.P), dtype=np.int64)
+        ms = simulate(fit.problem, x).makespan
+        return GAResult(x=x, makespan=float(ms), generations=0,
+                        evaluations=1, elapsed=time.time() - t0,
+                        history=[float(ms)], feasible=np.isfinite(ms))
+
+    best_g, _, history, gen = _evolve(space, fit, opts, rng, t0, seeds)
 
     # re-rank the best distinct candidates with the exact numpy DES (the
     # batched jax fitness may run in float32; ~1e-5 ranking noise)
@@ -351,6 +396,230 @@ def delta_fast(dag: CommDAG, opts: GAOptions | None = None,
     return GAResult(x=best_x, makespan=float(ms), generations=gen,
                     evaluations=fit.evaluations, elapsed=time.time() - t0,
                     history=history, feasible=np.isfinite(ms))
+
+
+# ------------------------------------------------------------- DELTA-Robust
+ROBUST_OBJECTIVES = ("weighted", "max-regret")
+
+
+def ensemble_x_upper_bound(ensemble: DagEnsemble) -> np.ndarray:
+    """Union-space Alg. 2 bound: elementwise max of the member bounds."""
+    return np.maximum.reduce([x_upper_bound(m) for m in ensemble.members])
+
+
+class EnsembleFitness(_CachedFitness):
+    """Population fitness over a `DagEnsemble`.
+
+    Same plumbing as `BatchedFitness` (shared `_CachedFitness` base), but
+    every unique genome is scored against *all* ensemble members in one
+    fused `EnsembleJaxDES.ensemble_genome_makespan` call (members x
+    genomes vmap), then scalarized:
+
+      weighted   : sum_m w_m * makespan_m
+      max-regret : max_m  makespan_m / refs_m
+
+    Any member-infeasible genome scores INF.
+    """
+
+    def __init__(self, ensemble: DagEnsemble, space: TopologySpace,
+                 opts: GAOptions, objective: str, refs: np.ndarray):
+        self.ensemble = ensemble
+        self.problems = [DESProblem(m) for m in ensemble.members]
+        super().__init__(space, opts, max(p.n for p in self.problems))
+        self.objective = objective
+        self.refs = np.asarray(refs, dtype=np.float64)
+        self.weights = np.asarray(ensemble.weights, dtype=np.float64)
+        self._jd = None
+        if self._use_jax and space.E > 0:
+            try:
+                from repro.core.des_jax import EnsembleJaxDES
+                self._jd = EnsembleJaxDES(self.problems)
+            except Exception:   # pragma: no cover - jax always available here
+                self._jd = None
+
+    def scalarize(self, ms: np.ndarray) -> np.ndarray:
+        """(S, M) member makespans -> (S,) objective values (INF-safe)."""
+        ms = np.asarray(ms, dtype=np.float64).reshape(-1, len(self.problems))
+        with np.errstate(invalid="ignore"):
+            if self.objective == "weighted":
+                out = ms @ self.weights
+            else:
+                out = (ms / self.refs).max(axis=1)
+        out[~np.isfinite(ms).all(axis=1)] = INF
+        return out
+
+    def member_makespans(self, genomes: np.ndarray) -> np.ndarray:
+        """(S, E) genomes -> (S, M) makespans (INF where infeasible)."""
+        genomes = np.asarray(genomes, dtype=np.int64).reshape(-1,
+                                                              self.space.E)
+        if self._jd is not None:
+            genomes, k = self._padded(genomes)
+            ms, feas = self._jd.ensemble_genome_makespan(
+                genomes, self.space.edge_u, self.space.edge_v)
+            self.batch_calls += 1
+            return np.where(feas, ms, INF)[:k]
+        out = np.empty((len(genomes), len(self.problems)))
+        for s, x in enumerate(self.space.to_matrix_batch(genomes)):
+            out[s] = [simulate(p, x).makespan for p in self.problems]
+        return out
+
+    def exact_member_makespans(self, genome: np.ndarray) -> np.ndarray:
+        """Exact (numpy DES) per-member makespans of one genome."""
+        x = self.space.to_matrix(genome)
+        return np.array([simulate(p, x).makespan for p in self.problems])
+
+    def _raw_scores(self, genomes: np.ndarray) -> np.ndarray:
+        return self.scalarize(self.member_makespans(genomes))
+
+
+@dataclass
+class RobustGAResult:
+    """One static topology scored against every ensemble member."""
+
+    x: np.ndarray
+    makespans: np.ndarray          # (M,) exact per-member DES makespans
+    regrets: np.ndarray            # (M,) makespans / refs
+    refs: np.ndarray               # (M,) reference (best single-DAG) spans
+    weights: np.ndarray            # (M,) normalized mixture weights
+    objective: str
+    objective_value: float
+    generations: int
+    evaluations: int
+    elapsed: float
+    history: list[float] = field(default_factory=list)
+    feasible: bool = True
+
+    @property
+    def worst_regret(self) -> float:
+        return float(self.regrets.max()) if len(self.regrets) else INF
+
+    @property
+    def weighted_makespan(self) -> float:
+        return float(self.makespans @ self.weights)
+
+    @property
+    def total_ports(self) -> int:
+        return int(self.x.sum())
+
+
+def delta_robust(ensemble: DagEnsemble, opts: GAOptions | None = None,
+                 objective: str = "max-regret",
+                 refs: np.ndarray | None = None,
+                 xbar: np.ndarray | None = None,
+                 seeds: list[np.ndarray] | None = None) -> RobustGAResult:
+    """DELTA-Robust: one static topology for a *set* of DAGs.
+
+    Runs the same domain-adapted GA as `delta_fast` (identical RNG stream
+    and loop -- a singleton ensemble reduces exactly to the single-DAG
+    path) over the union pair space, with per-genome fitness scored
+    against every member in one fused vmap DES call.
+
+    `refs` are the per-member reference makespans defining regret
+    (member's best single-DAG plan).  When omitted they are computed here
+    by running `delta_fast` per member with the same options.
+    """
+    opts = opts or GAOptions()
+    if objective not in ROBUST_OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"pick from {ROBUST_OBJECTIVES}")
+    t_start = time.time()
+    if refs is None:
+        refs = np.array([delta_fast(m, opts).makespan
+                         for m in ensemble.members])
+    refs = np.asarray(refs, dtype=np.float64)
+    if refs.shape != (ensemble.num_members,):
+        raise ValueError("refs must have one entry per ensemble member")
+    if not (np.isfinite(refs) & (refs > 0)).all():
+        raise ValueError(f"refs must be finite positive makespans: {refs}")
+
+    rng = np.random.default_rng(opts.seed)
+    space = TopologySpace.for_ensemble(ensemble, xbar)
+    fit = EnsembleFitness(ensemble, space, opts, objective, refs)
+    # the robust GA gets its own full time budget: the per-member ref
+    # runs above must not eat into _evolve's wall-clock limit
+    t0 = time.time()
+
+    if space.E == 0:    # no member has inter-pod traffic
+        x = np.zeros((space.P, space.P), dtype=np.int64)
+        ms = fit.exact_member_makespans(np.zeros(0, dtype=np.int64))
+        obj = float(fit.scalarize(ms[None])[0])
+        return RobustGAResult(
+            x=x, makespans=ms, regrets=ms / refs, refs=refs,
+            weights=np.asarray(ensemble.weights),
+            objective=objective, objective_value=obj, generations=0,
+            evaluations=1, elapsed=time.time() - t_start, history=[obj],
+            feasible=bool(np.isfinite(ms).all()))
+
+    best_g, _, history, gen = _evolve(space, fit, opts, rng, t0, seeds)
+
+    # re-rank the top distinct candidates with the exact numpy DES per
+    # member (same float32-noise guard as delta_fast)
+    ranked = sorted(fit.cache.items(), key=lambda kv: kv[1])[:8]
+    best_key, best_score = best_g.tobytes(), INF
+    best_ms = fit.exact_member_makespans(best_g)
+    for key, fval in ranked:
+        if not np.isfinite(fval):
+            continue
+        g = np.frombuffer(key, dtype=np.int64)
+        ms = fit.exact_member_makespans(g)
+        score = float(fit.scalarize(ms[None])[0])
+        if np.isfinite(score):
+            score += opts.port_weight * float(g.sum())
+        if score < best_score:
+            best_score, best_key, best_ms = score, key, ms
+    best_g = np.frombuffer(best_key, dtype=np.int64)
+    obj = float(fit.scalarize(best_ms[None])[0])
+    return RobustGAResult(
+        x=space.to_matrix(best_g), makespans=best_ms,
+        regrets=best_ms / refs, refs=refs,
+        weights=np.asarray(ensemble.weights), objective=objective,
+        objective_value=obj, generations=gen, evaluations=fit.evaluations,
+        elapsed=time.time() - t_start, history=history,
+        feasible=bool(np.isfinite(best_ms).all()))
+
+
+def trim_ports_ensemble(ensemble: DagEnsemble, x: np.ndarray,
+                        rel_tol: float = 1e-6) -> np.ndarray:
+    """Robust analog of `trim_ports`: greedy port minimization certified
+    against EVERY ensemble member -- a circuit is dropped only if no
+    member's exact (numpy DES) makespan degrades beyond `rel_tol` of its
+    value under the input topology.  Serial sweep in the legacy cyclic
+    order; fleet-scale ensembles (a few small phase DAGs) keep the
+    members x candidates simulation count cheap."""
+    problems = [DESProblem(m) for m in ensemble.members]
+    x = np.asarray(x)
+    base = np.array([simulate(p, x).makespan for p in problems])
+    if not np.isfinite(base).all():
+        return x
+    x = x.copy()
+    budgets = base * (1 + rel_tol)
+    pairs = ensemble.undirected_pairs()
+    E = len(pairs)
+    if E == 0:
+        return x
+    earr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    eu, ev = earr[:, 0], earr[:, 1]
+
+    ptr = 0   # cyclic sweep pointer (matches trim_ports' pair ordering)
+    while True:
+        droppable = np.nonzero(x[eu, ev] > 1)[0]
+        if len(droppable) == 0:
+            break
+        accepted = False
+        for i in np.argsort((droppable - ptr) % E, kind="stable"):
+            e = droppable[i]
+            xt = x.copy()
+            xt[eu[e], ev[e]] -= 1
+            xt[ev[e], eu[e]] -= 1
+            if all(simulate(p, xt).makespan <= b
+                   for p, b in zip(problems, budgets)):
+                x = xt
+                ptr = (int(e) + 1) % E
+                accepted = True
+                break
+        if not accepted:
+            break
+    return x
 
 
 def trim_ports(dag: CommDAG, x: np.ndarray, rel_tol: float = 1e-6,

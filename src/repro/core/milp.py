@@ -30,8 +30,8 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
-from repro.core.dag import VIRTUAL, CommDAG
-from repro.core.des import DESProblem, DESResult
+from repro.core.dag import VIRTUAL, CommDAG, DagEnsemble
+from repro.core.des import DESProblem, DESResult, simulate
 from repro.core.pruning import (IndexWindows, estimate_t_up, profile_anchors,
                                 task_time_index_pruning)
 from repro.core.xbound import x_upper_bound
@@ -169,20 +169,15 @@ class _Layout:
     u: dict[tuple[int, int], int]
 
 
-def _build(dag: CommDAG, opts: MILPOptions, windows: IndexWindows,
-           xbar: np.ndarray, t_up: float) -> tuple[_Model, _Layout]:
-    md = _Model()
-    n = dag.num_tasks
-    K = windows.K
-    B = dag.cluster.nic_bandwidth / VOL
-    U = dag.cluster.port_limits
-    T = t_up
-
-    vol = dag.volumes() / VOL
-    flows = dag.flows()
-
-    edges = dag.undirected_pairs()
-    edge_of = {}
+def _build_topology(md: _Model, cluster, edges: list[tuple[int, int]],
+                    xbar: np.ndarray
+                    ) -> tuple[np.ndarray, list[np.ndarray], list[int],
+                               dict[tuple[int, int], int]]:
+    """Shared topology block: x_e + Eq. (7) binary expansion + Eq. (5)
+    port budgets.  Factored out of `_build` so the robust formulation can
+    attach several per-member schedule blocks to ONE port allocation."""
+    U = cluster.port_limits
+    edge_of: dict[tuple[int, int], int] = {}
     for e_idx, (i, j) in enumerate(edges):
         edge_of[(i, j)] = e_idx
         edge_of[(j, i)] = e_idx
@@ -205,11 +200,29 @@ def _build(dag: CommDAG, opts: MILPOptions, windows: IndexWindows,
         md.row(coeffs, 0.0, 0.0)
 
     # ---- Eq. (5): port budgets (symmetric circuits: one row per pod)
-    for p in range(dag.cluster.num_pods):
+    for p in range(cluster.num_pods):
         coeffs = {int(xv[e]): 1.0 for e, (i, j) in enumerate(edges)
                   if i == p or j == p}
         if coeffs:
             md.row(coeffs, -np.inf, float(U[p]))
+    return xv, beta, Lbits, edge_of
+
+
+def _build_member(md: _Model, dag: CommDAG, fairness: bool,
+                  windows: IndexWindows, t_up: float,
+                  edges: list[tuple[int, int]],
+                  edge_of: dict[tuple[int, int], int], xv: np.ndarray,
+                  beta: list[np.ndarray], Lbits: list[int]) -> _Layout:
+    """One member's schedule block (Eqs. 8-18 + optional Eq. 17) wired to
+    the shared topology variables.  Every time/volume/activation variable
+    is private to the member; only x/beta are shared."""
+    n = dag.num_tasks
+    K = windows.K
+    B = dag.cluster.nic_bandwidth / VOL
+    T = t_up
+
+    vol = dag.volumes() / VOL
+    flows = dag.flows()
 
     # ---- time variables
     tv = md.vars(K + 1, 0.0, T)
@@ -325,7 +338,7 @@ def _build(dag: CommDAG, opts: MILPOptions, windows: IndexWindows,
 
     # ---- Eq. (17): optional fairness constraints
     uv: dict[tuple[int, int], int] = {}
-    if opts.fairness:
+    if fairness:
         for pair, tids in tasks_on.items():
             # tight Big-M: per-flow volume on this pair never exceeds the
             # largest per-flow task volume crossing it
@@ -343,9 +356,19 @@ def _build(dag: CommDAG, opts: MILPOptions, windows: IndexWindows,
                     md.row({u_: 1.0, wv[(m, k)]: -1.0 / f, y_: Mu},
                            -np.inf, Mu)
 
-    layout = _Layout(edges=edges, edge_of=edge_of, Lbits=Lbits, x=xv,
-                     beta=beta, t=tv, delta=dv, rho=rho, w=wv, y=yv, s=sv,
-                     S=Sv, Cm=Cv, C=Cvar, K=K, windows=windows, u=uv)
+    return _Layout(edges=edges, edge_of=edge_of, Lbits=Lbits, x=xv,
+                   beta=beta, t=tv, delta=dv, rho=rho, w=wv, y=yv, s=sv,
+                   S=Sv, Cm=Cv, C=Cvar, K=K, windows=windows, u=uv)
+
+
+def _build(dag: CommDAG, opts: MILPOptions, windows: IndexWindows,
+           xbar: np.ndarray, t_up: float) -> tuple[_Model, _Layout]:
+    """Single-DAG model: one topology block + one member block."""
+    md = _Model()
+    edges = dag.undirected_pairs()
+    xv, beta, Lbits, edge_of = _build_topology(md, dag.cluster, edges, xbar)
+    layout = _build_member(md, dag, opts.fairness, windows, t_up, edges,
+                           edge_of, xv, beta, Lbits)
     return md, layout
 
 
@@ -487,6 +510,180 @@ def solve_delta_milp(dag: CommDAG, opts: MILPOptions | None = None
             r2.solve_time = result.solve_time + r2.solve_time
             return r2
     return result
+
+
+# ------------------------------------------------------------- DELTA-Robust
+@dataclass
+class RobustMILPResult:
+    """Shared-x multi-member MILP solution."""
+
+    x: np.ndarray                  # (P, P) the one shared topology
+    makespans: np.ndarray          # (M,) per-member schedule makespans
+    objective: str                 # weighted | max-regret
+    objective_value: float
+    status: str
+    solve_time: float
+    members: list[MILPResult] = field(default_factory=list)
+    refs: np.ndarray | None = None
+    stats: dict = field(default_factory=dict)
+
+    @property
+    def feasible(self) -> bool:
+        return self.status in ("optimal", "feasible", "time_limit")
+
+    @property
+    def total_ports(self) -> int:
+        return int(self.x.sum())
+
+
+def solve_robust_milp(ensemble: DagEnsemble,
+                      opts: MILPOptions | None = None,
+                      objective: str = "weighted",
+                      refs: np.ndarray | None = None) -> RobustMILPResult:
+    """One shared port allocation, one schedule block per ensemble member.
+
+    The Eq. 5-7 topology variables (x_e over the *union* of the members'
+    active pairs, plus the binary expansion) are built once; every member
+    then contributes its own Eq. 8-18 task/interval block (with its own
+    per-member `task_time_index_pruning` windows and time grid) wired to
+    the shared beta bits.  Objectives:
+
+      weighted   : minimize sum_m w_m * C^m
+      max-regret : minimize Z subject to Z >= C^m / refs_m (epigraph)
+
+    `refs` (per-member reference makespans, e.g. the members' best
+    single-DAG plans) are required for max-regret; when omitted they are
+    computed by per-member `solve_delta_milp` runs with the same options.
+    `opts.seed_x` (e.g. a delta-robust GA incumbent) adds a valid
+    objective-level incumbent cut from its per-member DES makespans.
+    `opts.port_min` runs the usual lexicographic second phase at a fixed
+    objective value.
+    """
+    opts = opts or MILPOptions()
+    if objective not in ("weighted", "max-regret"):
+        raise ValueError(f"unknown objective {objective!r}")
+    t0 = time.time()
+    weights = np.asarray(ensemble.weights, dtype=np.float64)
+
+    if refs is None and objective == "max-regret":
+        single_opts = dataclasses.replace(opts, port_min=False, seed_x=None)
+        refs = np.array([solve_delta_milp(m, single_opts).makespan
+                         for m in ensemble.members])
+    if refs is not None:
+        refs = np.asarray(refs, dtype=np.float64)
+        if refs.shape != (ensemble.num_members,):
+            raise ValueError("refs must have one entry per member")
+        if objective == "max-regret" and not (
+                np.isfinite(refs) & (refs > 0)).all():
+            raise ValueError(f"max-regret needs finite positive refs: {refs}")
+
+    # per-member pruning profiles + the union topology bound
+    problems = [DESProblem(m) for m in ensemble.members]
+    windows_m: list[IndexWindows] = []
+    t_up_m: list[float] = []
+    xbar_u = None
+    for dag_m, problem in zip(ensemble.members, problems):
+        _, anchors, K_prof = profile_anchors(problem)
+        if opts.seed_x is not None:
+            # same guard as solve_delta_milp: the seed's objective cut
+            # below is only attainable if the pruned windows can express
+            # a schedule under the seed topology, so re-profile from it
+            # (K keeps the baseline profile as a floor)
+            try:
+                _, sa, sk = profile_anchors(problem,
+                                            np.asarray(opts.seed_x))
+                anchors, K_prof = sa, max(sk, K_prof)
+            except RuntimeError:
+                pass    # infeasible seed on this member: keep the default
+        t_up = opts.t_up or estimate_t_up(problem)
+        K = opts.K or (K_prof + opts.k_slack)
+        anchors_used = anchors if opts.prune else None
+        windows_m.append(task_time_index_pruning(
+            dag_m, K, anchors_used, anchor_margin=opts.anchor_margin))
+        t_up_m.append(t_up)
+        xbar = opts.xbar if opts.xbar is not None else \
+            x_upper_bound(dag_m, t_up=t_up)
+        xbar_u = xbar if xbar_u is None else np.maximum(xbar_u, xbar)
+
+    md = _Model()
+    edges = ensemble.undirected_pairs()
+    xv, beta, Lbits, edge_of = _build_topology(md, ensemble.cluster, edges,
+                                               xbar_u)
+    lays = [_build_member(md, dag_m, opts.fairness, win, t_up, edges,
+                          edge_of, xv, beta, Lbits)
+            for dag_m, win, t_up in zip(ensemble.members, windows_m,
+                                        t_up_m)]
+
+    # ---- objective
+    if objective == "weighted":
+        md.obj = {int(lay.C): float(w) for lay, w in zip(lays, weights)}
+        obj_of = lambda z: float(sum(      # noqa: E731 - local reducer
+            w * z[lay.C] for lay, w in zip(lays, weights)))
+    else:
+        z_ub = max(t / r for t, r in zip(t_up_m, refs))
+        Z = md.var(0.0, float(z_ub))
+        for lay, r in zip(lays, refs):
+            md.row({Z: float(r), int(lay.C): -1.0}, 0.0, np.inf)
+        # epsilon tie-break on the member makespans: the epigraph objective
+        # alone leaves every non-binding C^m floating up to Z * ref_m
+        eps = 1e-5
+        md.obj = {Z: 1.0, **{int(lay.C): eps * float(w) / float(r)
+                             for lay, w, r in zip(lays, weights, refs)}}
+        obj_of = lambda z: float(z[Z])     # noqa: E731 - local reducer
+
+    # ---- incumbent cut from a seed topology (GA result): its per-member
+    # fair-share DES makespans are simultaneously achievable by one x, so
+    # bounding the *objective* (never the individual C^m) is valid
+    if opts.seed_x is not None:
+        seed_ms = np.array([simulate(p, np.asarray(opts.seed_x)).makespan
+                            for p in problems])
+        if np.isfinite(seed_ms).all():
+            slack = (1 + 1e-6)
+            if objective == "weighted":
+                cut = float(weights @ seed_ms) * slack + 1e-9
+                md.row({int(lay.C): float(w)
+                        for lay, w in zip(lays, weights)}, -np.inf, cut)
+            else:
+                md.ub[Z] = min(md.ub[Z],
+                               float((seed_ms / refs).max()) * slack + 1e-9)
+    prep_time = time.time() - t0
+
+    ts = time.time()
+    status, z, info = md.solve(opts.time_limit, opts.mip_rel_gap,
+                               opts.verbose)
+    solve_time = time.time() - ts
+    P = ensemble.cluster.num_pods
+    stats = {**info, "prep_time": prep_time,
+             "K": [w.K for w in windows_m]}
+    if z is None:
+        return RobustMILPResult(
+            x=np.zeros((P, P), dtype=np.int64),
+            makespans=np.full(ensemble.num_members, np.inf),
+            objective=objective, objective_value=np.inf, status=status,
+            solve_time=solve_time, refs=refs, stats=stats)
+
+    if opts.port_min:
+        # lexicographic phase 2: fix the objective, minimize total circuits
+        if objective == "weighted":
+            md.row({int(lay.C): float(w)
+                    for lay, w in zip(lays, weights)}, -np.inf,
+                   obj_of(z) * (1 + 1e-6) + 1e-9)
+        else:
+            md.ub[Z] = obj_of(z) * (1 + 1e-6) + 1e-9
+        md.obj = {int(xv[e]): 1.0 for e in range(len(edges))}
+        st2, z2, info2 = md.solve(opts.time_limit, opts.mip_rel_gap,
+                                  opts.verbose)
+        if st2 in ("optimal", "time_limit") and z2 is not None:
+            status, z = st2, z2
+            stats["phase2"] = info2
+
+    members = [_extract(dag_m, md, lay, z, status, solve_time, {})
+               for dag_m, lay in zip(ensemble.members, lays)]
+    makespans = np.array([m.makespan for m in members])
+    return RobustMILPResult(
+        x=members[0].x, makespans=makespans, objective=objective,
+        objective_value=obj_of(z), status=status, solve_time=solve_time,
+        members=members, refs=refs, stats=stats)
 
 
 def validate_solution(dag: CommDAG, res: MILPResult, tol: float = 1e-5

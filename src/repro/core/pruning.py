@@ -13,7 +13,6 @@ constant offsets).
 """
 from __future__ import annotations
 
-import collections
 from dataclasses import dataclass
 
 import numpy as np

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dag import VIRTUAL, CommDAG
+from repro.core.dag import CommDAG
 from repro.core.pruning import cal_task_time_windows, estimate_t_up
 from repro.core.des import DESProblem
 
@@ -77,7 +77,6 @@ def mwis(weights: np.ndarray, adj: np.ndarray, exact_limit: int = 40
     order = np.argsort(-weights)
     w = weights[order].astype(float)
     a = adj[np.ix_(order, order)]
-    suffix = np.concatenate([np.cumsum(w[::-1])[::-1], [0.0]])
     best = 0.0
 
     def rec(idx: int, avail: np.ndarray, acc: float) -> None:

@@ -20,7 +20,7 @@ import logging
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 log = logging.getLogger("repro.ft")
 

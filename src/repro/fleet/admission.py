@@ -19,13 +19,14 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.cluster import GBPS, ClusterSpec
-from repro.core.dag import CommDAG
+from repro.core.dag import CommDAG, DagEnsemble
 from repro.core.des import DESProblem, simulate
-from repro.core.ga import GAOptions, delta_fast, trim_ports
+from repro.core.ga import (GAOptions, delta_fast, delta_robust, trim_ports,
+                           trim_ports_ensemble)
 from repro.core.schedule import build_comm_dag
 from repro.core.traffic import JobSpec
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
-from repro.fleet.plancache import CachedPlan, PlanCache
+from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
 
 
 @dataclass(frozen=True)
@@ -55,6 +56,7 @@ class Tenant:
     reverse_stages: bool
     port_min: bool
     dag: CommDAG
+    dag_history: list[CommDAG] = field(default_factory=list)
     plan: CachedPlan | None = None
     base_plan: CachedPlan | None = None   # within-entitlement plan; grants
     _des: object = field(default=None, repr=False)  # restore to this
@@ -201,6 +203,96 @@ class AdmissionController:
 
         plan, hit = self.cache.get_or_plan(
             tenant.dag, solve, extra=("delta-fast", tenant.port_min))
+        plan.details["cache_hit"] = hit
+        tenant.plan = plan
+        tenant.base_plan = plan.copy()
+        self.ledger.commit(tenant.name,
+                           tenant.fleet_usage(self.fleet.num_pods))
+        return plan
+
+    def plan_robust(self, tenant: Tenant, incumbents: list[CommDAG],
+                    objective: str = "max-regret") -> CachedPlan:
+        """Robust plan over {incumbent DAGs + the tenant's current DAG}.
+
+        Instead of replanning from scratch on every phase/traffic change --
+        which assumes the OCS can rewire for free -- the tenant keeps one
+        static topology scored against the whole set, so flipping back to
+        a previous phase needs no reconfiguration.  Incumbents whose local
+        cluster view no longer matches (e.g. recorded under different
+        donated-port limits) are dropped; with no usable incumbent this
+        degrades to the plain `plan` path.
+        """
+        from repro.core.ga import ROBUST_OBJECTIVES
+        if objective not in ROBUST_OBJECTIVES:
+            # fail fast: the except below degrades solve-time ValueErrors
+            # to a plain plan and must not swallow a config typo
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"pick from {ROBUST_OBJECTIVES}")
+        cl = tenant.dag.cluster
+        usable = [d for d in incumbents
+                  if d.cluster.num_pods == cl.num_pods
+                  and tuple(d.cluster.port_limits) == tuple(cl.port_limits)
+                  and d.cluster.nic_bandwidth == cl.nic_bandwidth]
+        # drop incumbents identical to the current DAG (phase flip-flops)
+        cur_sig = dag_signature(tenant.dag)
+        seen = {cur_sig}
+        members, sigs = [tenant.dag], [cur_sig]
+        for d in usable:
+            sig = dag_signature(d)
+            if sig not in seen:
+                seen.add(sig)
+                members.append(d)
+                sigs.append(sig)
+        if len(members) == 1:
+            return self.plan(tenant)
+
+        def solve() -> CachedPlan:
+            ensemble = DagEnsemble(
+                members, names=[f"phase{i}" for i in range(len(members))])
+            rob = delta_robust(ensemble, self.ga_options,
+                               objective=objective)
+            x = rob.x
+            makespans = rob.makespans
+            if tenant.port_min and rob.feasible:
+                # port-min donors keep donating on the robust path: trim
+                # circuits certified against EVERY member, so the freed
+                # ports never break another phase's makespan
+                from repro.core.api import evaluate_on_ensemble
+                x = trim_ports_ensemble(ensemble, x)
+                makespans = evaluate_on_ensemble(ensemble, x)
+            problem = DESProblem(tenant.dag)
+            ideal = simulate(problem, np.zeros((len(tenant.pods),) * 2),
+                             ideal=True)
+            res = simulate(problem, x)
+            nct = res.comm_time / ideal.comm_time \
+                if ideal.comm_time > 0 else float("inf")
+            return CachedPlan(
+                x=x, makespan=res.makespan, comm_time=res.comm_time,
+                nct=nct, ideal_comm_time=ideal.comm_time,
+                details={"robust": True, "objective": objective,
+                         "port_min": tenant.port_min,
+                         "num_members": len(members),
+                         "member_makespans": makespans.tolist(),
+                         "member_regrets": (makespans / rob.refs).tolist(),
+                         "worst_regret": float(
+                             (makespans / rob.refs).max()),
+                         "generations": rob.generations,
+                         "evaluations": rob.evaluations})
+
+        try:
+            plan, hit = self.cache.get_or_plan(
+                tenant.dag, solve,
+                extra=("delta-robust", objective, tenant.port_min,
+                       tuple(sorted(sigs))))
+        except ValueError:
+            # the robust search space can be empty even when every phase
+            # plans fine alone: the *union* of active pairs may exceed a
+            # pod's port budget (one circuit per incident pair is the
+            # connectivity floor), and an incumbent member may have become
+            # unplannable under the current limits (infeasible refs).
+            # Degrade to the current-DAG plan instead of killing the
+            # online replanning loop.
+            return self.plan(tenant)
         plan.details["cache_hit"] = hit
         tenant.plan = plan
         tenant.base_plan = plan.copy()

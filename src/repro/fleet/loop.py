@@ -19,7 +19,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.ga import GAOptions
+from repro.core.ga import GAOptions, ROBUST_OBJECTIVES
 from repro.core.traffic import JobSpec
 from repro.fleet.admission import (AdmissionController, AdmissionError,
                                    FleetSpec, Tenant)
@@ -65,6 +65,9 @@ class FleetPlanner:
                  donors_can_receive: bool = False,
                  auto_realloc: bool = True,
                  num_random_candidates: int = 8,
+                 robust_replan: bool = False,
+                 robust_objective: str = "max-regret",
+                 robust_history: int = 3,
                  seed: int = 0):
         self.fleet = fleet
         self.ledger = PortLedger(fleet.capacity())
@@ -76,6 +79,20 @@ class FleetPlanner:
         self.donors_can_receive = donors_can_receive
         self.auto_realloc = auto_realloc
         self.num_random_candidates = num_random_candidates
+        # robust phase changes: instead of replanning from scratch, a
+        # TrafficChange plans one static topology over {incumbent DAGs +
+        # the arriving workload} (DELTA-Robust), bounded to the last
+        # `robust_history` distinct incumbent phases.  Validate the
+        # objective HERE: plan_robust degrades ValueErrors from the solve
+        # to a plain plan (empty union space / infeasible refs), which
+        # must never mask a configuration typo
+        if robust_objective not in ROBUST_OBJECTIVES:
+            raise ValueError(
+                f"unknown robust_objective {robust_objective!r}; "
+                f"pick from {ROBUST_OBJECTIVES}")
+        self.robust_replan = robust_replan
+        self.robust_objective = robust_objective
+        self.robust_history = robust_history
         self.rng = np.random.default_rng(seed)
         self.realloc_batches = 0        # batched JaxDES calls issued
         self.realloc_candidates = 0     # topologies evaluated inside them
@@ -155,18 +172,29 @@ class FleetPlanner:
         # grants were already revoked in handle(); take donations back too
         self.ledger.withdraw_donation(ev.name)
         nct_before = tenant.plan.nct if tenant.plan else float("inf")
+        incumbents = (tenant.dag_history + [tenant.dag])[
+            -self.robust_history:] if self.robust_history > 0 else []
         new_tenant = Tenant(
             name=ev.name, job=ev.job, pods=tenant.pods,
             reverse_stages=tenant.reverse_stages, port_min=tenant.port_min,
             dag=self.admission.build_dag(ev.name, ev.job, tenant.pods,
-                                         tenant.reverse_stages))
-        self.admission.plan(new_tenant)
+                                         tenant.reverse_stages),
+            dag_history=incumbents)
+        if self.robust_replan:
+            self.admission.plan_robust(new_tenant, incumbents,
+                                       objective=self.robust_objective)
+        else:
+            self.admission.plan(new_tenant)
         self.tenants[ev.name] = new_tenant
         donated = self.ledger.donate(ev.name) if tenant.port_min \
             else np.zeros(self.fleet.num_pods, dtype=np.int64)
+        details = new_tenant.plan.details
         return {"event": "traffic_change", "tenant": ev.name,
                 "nct_before": nct_before, "nct": new_tenant.plan.nct,
-                "cache_hit": bool(new_tenant.plan.details.get("cache_hit")),
+                "cache_hit": bool(details.get("cache_hit")),
+                "robust": bool(details.get("robust")),
+                "robust_members": details.get("num_members", 1),
+                "worst_regret": details.get("worst_regret"),
                 "donated_ports": int(donated.sum())}
 
     # -------------------------------------------------------- surplus pass

@@ -24,7 +24,6 @@ Accounting model per computation:
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 

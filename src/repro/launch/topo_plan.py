@@ -15,7 +15,7 @@ import json
 import numpy as np
 
 from repro.configs import ALL_ARCHS, make_job
-from repro.core.api import METHODS, compare, optimize
+from repro.core.api import METHODS, optimize
 from repro.core.ga import GAOptions
 from repro.core.milp import MILPOptions
 from repro.core.schedule import build_comm_dag

@@ -1,5 +1,4 @@
 """Traffic-matrix baselines: feasibility + allocation shape."""
-import numpy as np
 import pytest
 from hypothesis import given, settings
 
@@ -37,6 +36,28 @@ def test_property_baselines_always_feasible(dag):
         for p in range(dag.cluster.num_pods):
             assert x[p].sum() <= U[p]
         assert simulate(DESProblem(dag), x).feasible
+
+
+@settings(max_examples=30, deadline=None)
+@given(random_comm_dags(max_pods=5, max_tasks=14))
+def test_property_budget_symmetry_connectivity(dag):
+    """Structural invariants every TM baseline must uphold on arbitrary
+    DAGs: per-pod port budgets are never exceeded, the allocation is a
+    symmetric matrix with an empty diagonal, and every active pair gets at
+    least one circuit (connectivity before any weighting rule spends the
+    remaining budget).  Runs under tests/_hypothesis_stub.py too."""
+    U = dag.cluster.port_limits
+    pairs = dag.undirected_pairs()
+    for name, fn in BASELINES.items():
+        x = fn(dag)
+        assert (x == x.T).all(), f"{name}: allocation must be symmetric"
+        assert (x.diagonal() == 0).all(), f"{name}: self-circuits"
+        assert (x >= 0).all(), f"{name}: negative circuits"
+        for p in range(dag.cluster.num_pods):
+            assert x[p].sum() <= U[p], \
+                f"{name}: pod {p} over budget ({x[p].sum()} > {U[p]})"
+        for i, j in pairs:
+            assert x[i, j] >= 1, f"{name}: active pair ({i},{j}) dark"
 
 
 def test_prop_alloc_tracks_volume():

@@ -7,7 +7,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import REGISTRY
 from repro.distributed import sharding as shd

@@ -9,7 +9,7 @@ import textwrap
 
 import pytest
 
-from repro.launch.hloanalysis import analyze, parse_computations
+from repro.launch.hloanalysis import analyze
 
 
 def test_hlo_analyzer_counts_scan_trips():

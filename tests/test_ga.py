@@ -48,10 +48,12 @@ def test_property_repair_restores_feasibility(dag, seed):
     if ok:
         assert space.is_feasible(repaired)
     else:
-        # repair only fails when reducible edges ran out; then connectivity
-        # itself must violate the budget
-        used = space.port_usage(np.ones(space.E, dtype=np.int64))
-        assert (repaired[repaired > 1].size == 0) or True
+        # repair only fails when reducible edges ran out: every still-over-
+        # budget pod's incident edges are at the connectivity minimum
+        over = space.port_usage(repaired) > space.U
+        assert over.any()
+        for p in np.nonzero(over)[0]:
+            assert (repaired[space.inc[p].astype(bool)] == 1).all()
 
 
 def test_seeding_with_baseline(dag):

@@ -1,0 +1,155 @@
+"""benchmarks/check_regression.py -- the CI benchmark-regression gate.
+
+The gate compares fresh smoke ``BENCH_<suite>.json`` payloads against the
+committed repo-root baselines: quality metrics (makespan / worst_regret in
+a row's ``derived``) fail beyond +20%, wall clock beyond the per-suite
+ratio.  These tests drive ``main`` on synthetic payload directories,
+including the seeded 25% makespan regression the gate must catch.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import (SUITE_TOL, main,  # noqa: E402
+                                         parse_derived)
+
+
+def _payload():
+    return {
+        "suite": "ga", "full": False, "seconds": 12.0, "error": None,
+        "rows": [
+            {"name": "ga/vectorized/megatron-177b/mb8",
+             "us_per_call": 1_500_000.0,
+             "derived": "seconds=1.50;gens=6;makespan=8.640988"},
+            {"name": "robust/gpt7b-phase/max-regret",
+             "us_per_call": 2_000_000.0,
+             "derived": "worst_regret=1.0343;ports=14"},
+            {"name": "ga/fast-row", "us_per_call": 2_000.0,
+             "derived": "makespan=1.0"},
+        ],
+    }
+
+
+def _write(dirpath, payload, suite="ga"):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, f"BENCH_{suite}.json"), "w") as f:
+        json.dump(payload, f)
+
+
+def _run(tmp_path, fresh_payload, base_payload=None, suites="ga"):
+    base_dir = str(tmp_path / "base")
+    fresh_dir = str(tmp_path / "fresh")
+    _write(base_dir, base_payload or _payload())
+    _write(fresh_dir, fresh_payload)
+    return main(["--baseline-dir", base_dir, "--fresh-dir", fresh_dir,
+                 "--suites", suites])
+
+
+def test_parse_derived():
+    d = parse_derived("seconds=1.50;gens=6;makespan=8.64;identical=True")
+    assert d == {"seconds": 1.50, "gens": 6.0, "makespan": 8.64}
+
+
+def test_identical_passes(tmp_path):
+    assert _run(tmp_path, _payload()) == 0
+
+
+def test_seeded_25pct_makespan_regression_fails(tmp_path):
+    fresh = _payload()
+    fresh["rows"][0]["derived"] = "seconds=1.50;gens=6;makespan=10.801235"
+    assert _run(tmp_path, fresh) == 1     # 8.640988 * 1.25: over the +20%
+
+
+def test_makespan_within_tolerance_passes(tmp_path):
+    fresh = _payload()
+    fresh["rows"][0]["derived"] = "seconds=1.50;gens=6;makespan=9.9"
+    assert _run(tmp_path, fresh) == 0     # +14.6% < +20%
+
+
+def test_worst_regret_regression_fails(tmp_path):
+    fresh = _payload()
+    fresh["rows"][1]["derived"] = "worst_regret=1.3500;ports=14"
+    assert _run(tmp_path, fresh) == 1     # 1.0343 -> 1.35 is +30%
+
+
+def test_wall_clock_regression_fails(tmp_path):
+    fresh = _payload()
+    ratio = SUITE_TOL["ga"]["wall"]
+    fresh["rows"][0]["us_per_call"] = 1_500_000.0 * (ratio + 0.5)
+    assert _run(tmp_path, fresh) == 1
+
+
+def test_wall_floor_ignores_fast_rows(tmp_path):
+    fresh = _payload()
+    fresh["rows"][2]["us_per_call"] = 9_000.0   # 4.5x but sub-10ms row
+    assert _run(tmp_path, fresh) == 0
+
+
+def test_wall_floor_still_catches_blowups(tmp_path):
+    """A sub-floor baseline row exploding to seconds must fail: the floor
+    considers both sides, not just the baseline."""
+    fresh = _payload()
+    fresh["rows"][2]["us_per_call"] = 30_000_000.0   # 2ms -> 30s
+    assert _run(tmp_path, fresh) == 1
+
+
+def test_wall_scale_env_relaxes_gate(tmp_path, monkeypatch):
+    fresh = _payload()
+    ratio = SUITE_TOL["ga"]["wall"]
+    fresh["rows"][0]["us_per_call"] = 1_500_000.0 * (ratio + 0.5)
+    monkeypatch.setenv("REPRO_GATE_WALL_SCALE", "2.0")
+    assert _run(tmp_path, fresh) == 0
+
+
+def test_missing_row_fails(tmp_path):
+    fresh = _payload()
+    fresh["rows"] = fresh["rows"][1:]
+    assert _run(tmp_path, fresh) == 1
+
+
+def test_lost_metric_fails(tmp_path):
+    fresh = _payload()
+    fresh["rows"][0]["derived"] = "seconds=1.50;gens=6"
+    assert _run(tmp_path, fresh) == 1
+
+
+def test_fresh_error_fails(tmp_path):
+    fresh = _payload()
+    fresh["error"] = "RuntimeError: boom"
+    assert _run(tmp_path, fresh) == 1
+
+
+def test_missing_fresh_file_fails(tmp_path):
+    base_dir, fresh_dir = str(tmp_path / "base"), str(tmp_path / "fresh")
+    _write(base_dir, _payload())
+    os.makedirs(fresh_dir, exist_ok=True)
+    assert main(["--baseline-dir", base_dir, "--fresh-dir", fresh_dir,
+                 "--suites", "ga"]) == 1
+
+
+def test_missing_baseline_skips(tmp_path):
+    base_dir, fresh_dir = str(tmp_path / "base"), str(tmp_path / "fresh")
+    os.makedirs(base_dir, exist_ok=True)
+    _write(fresh_dir, _payload())
+    assert main(["--baseline-dir", base_dir, "--fresh-dir", fresh_dir,
+                 "--suites", "ga"]) == 0
+
+
+def test_extra_fresh_rows_are_fine(tmp_path):
+    fresh = _payload()
+    fresh["rows"].append({"name": "ga/new-row", "us_per_call": 1.0,
+                          "derived": "makespan=123.0"})
+    assert _run(tmp_path, fresh) == 0
+
+
+def test_committed_baselines_pass_against_themselves():
+    """The real committed BENCH_*.json gate cleanly against themselves
+    (what CI sees when the smoke run exactly reproduces the baselines)."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    suites = [s for s in ("des", "ga", "tab1", "robust")
+              if os.path.exists(os.path.join(root, f"BENCH_{s}.json"))]
+    assert suites, "committed BENCH_*.json baselines are missing"
+    assert main(["--baseline-dir", root, "--fresh-dir", root,
+                 "--suites", ",".join(suites)]) == 0
