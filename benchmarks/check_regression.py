@@ -52,6 +52,14 @@ SUITE_TOL: dict[str, dict[str, float]] = {
     "robust": {"wall": 4.0},
 }
 
+# rows that MUST exist in both the committed baseline and the fresh run:
+# the robust suite-total wall clock pins the fused-DES engine wins
+# (bucketed jit cache, kernel-backed fair-share loop) -- losing the row
+# (e.g. a refactor silently dropping it) must fail the gate, not skip it
+REQUIRED_ROWS: dict[str, tuple[str, ...]] = {
+    "robust": ("robust/suite_wall",),
+}
+
 
 def parse_derived(derived: str) -> dict[str, float]:
     """``k1=v1;k2=v2`` -> {k: float(v)} keeping only float-parsable values."""
@@ -89,6 +97,13 @@ def compare_suite(suite: str, base: dict, fresh: dict, metric_tol: float,
         problems.append(f"{suite}: fresh run errored: {fresh['error']}")
         return problems, lines
     fresh_rows = {r["name"]: r for r in fresh.get("rows", [])}
+    base_names = {r["name"] for r in base.get("rows", [])}
+    for required in REQUIRED_ROWS.get(suite, ()):
+        for side, present in (("baseline", required in base_names),
+                              ("fresh run", required in fresh_rows)):
+            if not present:
+                problems.append(f"{suite}: required row {required!r} "
+                                f"missing from the {side}")
     for brow in base.get("rows", []):
         name = brow["name"]
         frow = fresh_rows.get(name)
@@ -153,7 +168,16 @@ def main(argv: list[str] | None = None) -> int:
         base = load_suite(os.path.join(args.baseline_dir, fname))
         fresh = load_suite(os.path.join(args.fresh_dir, fname))
         if base is None:
-            print(f"# {suite}: no committed baseline ({fname}); skipping")
+            if REQUIRED_ROWS.get(suite):
+                # a suite with pinned rows must not lose its gate by
+                # losing the baseline file itself
+                problems.append(
+                    f"{suite}: committed baseline {fname} is missing but "
+                    f"the suite has required rows "
+                    f"{list(REQUIRED_ROWS[suite])}; restore the baseline")
+            else:
+                print(f"# {suite}: no committed baseline ({fname}); "
+                      f"skipping")
             continue
         if fresh is None:
             problems.append(f"{suite}: fresh run produced no {fname} "

@@ -1,5 +1,6 @@
 """DES engine throughput: numpy event loop vs batched JAX vmap fitness
-(the TPU-native ParallelEvalDES adaptation)."""
+(the TPU-native ParallelEvalDES adaptation), plus the bucketed compile
+cache (a fresh `JaxDES` on a warm bucket must not re-jit)."""
 from __future__ import annotations
 
 import time
@@ -8,7 +9,7 @@ import numpy as np
 
 from benchmarks.common import Row, bench_dag
 from repro.core.des import DESProblem, simulate
-from repro.core.des_jax import JaxDES
+from repro.core.des_jax import JaxDES, des_cache_stats
 from repro.core.ga import TopologySpace
 
 
@@ -52,4 +53,19 @@ def run(full: bool = False) -> list[Row]:
         np.allclose(ms_g[feas_g], ms[feas], rtol=1e-6))
     rows.append(Row(f"des/jax_genome32/{w}", us_gen,
                     f"speedup_vs_numpy={us_np/us_gen:.1f}x;match={agree}"))
+
+    # jit churn: constructing a FRESH JaxDES on the (now warm) bucket and
+    # evaluating must reuse the cached executables instead of recompiling
+    # (pre-bucketing this cost a full XLA compile, seconds per instance)
+    stats0 = des_cache_stats()
+    t0 = time.time()
+    jd2 = JaxDES(DESProblem(dag))
+    ms2, _ = jd2.batch_genome_makespan(G, space.edge_u, space.edge_v)
+    us_fresh = (time.time() - t0) * 1e6
+    stats1 = des_cache_stats()
+    rows.append(Row(
+        f"des/jit_cache_reuse/{w}", us_fresh,
+        f"recompiles={stats1['misses'] - stats0['misses']};"
+        f"cache_hits={stats1['hits'] - stats0['hits']};"
+        f"match={bool(np.allclose(ms2, ms_g, equal_nan=True))}"))
     return rows

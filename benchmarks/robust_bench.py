@@ -80,10 +80,13 @@ def _mixes(full: bool, smoke: bool) -> list[tuple[str, list, list[str]]]:
 
 
 def run(full: bool = False) -> list[Row]:
+    from repro.core.des_jax import des_cache_stats
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
     opts = _ga_opts(full, smoke)
     rows: list[Row] = []
     payload: dict = {}
+    t_suite = time.time()
+    cache0 = des_cache_stats()
     for mix_name, dags, names in _mixes(full, smoke):
         problems = [DESProblem(d) for d in dags]
         singles, t_single = [], []
@@ -132,5 +135,19 @@ def run(full: bool = False) -> list[Row]:
                 "seconds": dt,
             }
         payload[mix_name] = mix_payload
+    # suite-total wall clock: the regression gate pins this row, so a lost
+    # DES-engine optimization (jit-cache churn, kernel backend) fails CI
+    # even when no single mix crosses the per-row floor
+    cache1 = des_cache_stats()
+    wall = time.time() - t_suite
+    compiles = cache1["misses"] - cache0["misses"]
+    reuses = cache1["hits"] - cache0["hits"]
+    rows.append(Row(
+        "robust/suite_wall", wall * 1e6,
+        f"seconds={wall:.2f};des_compiles={compiles};"
+        f"des_cache_reuses={reuses}"))
+    payload["suite"] = {"seconds": wall, "des_compiles": compiles,
+                        "des_cache_reuses": reuses,
+                        "des_cache": cache1}
     save_json("robust_bench", payload)
     return rows

@@ -34,6 +34,20 @@ from repro.core.ga import (GAOptions, GAResult, delta_fast, delta_robust,
 from repro.core.milp import (MILPOptions, MILPResult, solve_delta_milp,
                              solve_robust_milp)
 
+# DES engine knobs + jit-churn accounting, re-exported so callers tuning
+# the evaluation engine (kernel backend, compile buckets) need only the
+# facade: optimize(dag, ga_options=GAOptions(des_options=DESOptions(...))).
+# Lazy (PEP 562): the rest of the facade works without importing jax, and
+# every other des_jax consumer in the codebase imports it inside functions.
+_DES_JAX_EXPORTS = ("DESOptions", "des_cache_stats")
+
+
+def __getattr__(name: str):
+    if name in _DES_JAX_EXPORTS:
+        from repro.core import des_jax
+        return getattr(des_jax, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 INF = float("inf")
 
 METHODS = ("prop-alloc", "sqrt-alloc", "iter-halve",

@@ -26,6 +26,7 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
 
 import numpy as np
 
@@ -33,7 +34,38 @@ from repro.core.dag import CommDAG, DagEnsemble
 from repro.core.des import DESProblem, simulate
 from repro.core.xbound import x_upper_bound
 
+if TYPE_CHECKING:   # pragma: no cover - annotation-only import
+    from repro.core.des_jax import DESOptions
+
 INF = float("inf")
+
+# float32 relative slack for the batched-DES pre-filter in the trimming
+# sweeps: accepts are always certified with the exact numpy DES, so the
+# filter margin only guards against false *negatives*
+_TRIM_FILTER_SLACK = 1e-3
+# candidates the float32 filter rejected by more than this relative band
+# are not exact-rechecked on termination: the engines agree to ~1e-5 on
+# the equivalence suites, so a >5% f32 overshoot of an exactly-acceptable
+# drop would need an f32 fair-share freeze flip with outsized schedule
+# impact.  If one ever occurs, the cost is bounded -- the sweep retains
+# ports it could have dropped; an accepted drop is always numpy-certified,
+# so the makespan budget is never violated either way.
+_TRIM_BACKSTOP_BAND = 5e-2
+
+
+def _trim_filter_bands(ms: np.ndarray, feas: np.ndarray, budgets
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """(fits, near) f32 pre-filter bands shared by the trimming sweeps.
+
+    `fits` passes the conservative accept filter; `near` is the ambiguous
+    band exact-rechecked before termination.  f32-infeasible rows stay in
+    the ambiguous band: the band bounds makespan divergence only, not a
+    feasibility misjudgment (rare, and cheap to recheck exactly).
+    Elementwise -- the ensemble sweep reduces across members afterwards.
+    """
+    fits = feas & (ms <= budgets * (1 + _TRIM_FILTER_SLACK) + 1e-12)
+    near = ~feas | (ms <= budgets * (1 + _TRIM_BACKSTOP_BAND) + 1e-12)
+    return fits, near
 
 
 @dataclass
@@ -50,6 +82,9 @@ class GAOptions:
     jax_task_limit: int = 1200
     time_limit: float = 120.0
     port_weight: float = 1e-9     # lexicographic secondary objective
+    # engine knobs for the jax DES (kernel backend, bucketed jit cache);
+    # None inherits the env-driven defaults (see des_jax.DESOptions)
+    des_options: "DESOptions | None" = None
 
 
 @dataclass
@@ -271,7 +306,7 @@ class BatchedFitness(_CachedFitness):
         if self._use_jax and space.E > 0:
             try:
                 from repro.core.des_jax import JaxDES
-                self._jd = JaxDES(self.problem)
+                self._jd = JaxDES(self.problem, options=opts.des_options)
             except Exception:   # pragma: no cover - jax always available here
                 self._jd = None
 
@@ -433,7 +468,8 @@ class EnsembleFitness(_CachedFitness):
         if self._use_jax and space.E > 0:
             try:
                 from repro.core.des_jax import EnsembleJaxDES
-                self._jd = EnsembleJaxDES(self.problems)
+                self._jd = EnsembleJaxDES(self.problems,
+                                          options=opts.des_options)
             except Exception:   # pragma: no cover - jax always available here
                 self._jd = None
 
@@ -579,13 +615,24 @@ def delta_robust(ensemble: DagEnsemble, opts: GAOptions | None = None,
 
 
 def trim_ports_ensemble(ensemble: DagEnsemble, x: np.ndarray,
-                        rel_tol: float = 1e-6) -> np.ndarray:
+                        rel_tol: float = 1e-6,
+                        backend: str = "auto") -> np.ndarray:
     """Robust analog of `trim_ports`: greedy port minimization certified
     against EVERY ensemble member -- a circuit is dropped only if no
     member's exact (numpy DES) makespan degrades beyond `rel_tol` of its
-    value under the input topology.  Serial sweep in the legacy cyclic
-    order; fleet-scale ensembles (a few small phase DAGs) keep the
-    members x candidates simulation count cheap."""
+    value under the input topology.
+
+    Batched like the single-DAG `trim_ports`: each round scores all
+    drop-one candidates against all members in ONE
+    `EnsembleJaxDES.ensemble_genome_makespan` call (candidates x members
+    vmap over the shared compile bucket), then accepts the first fitting
+    drop in the legacy cyclic order after certifying it per member with
+    the exact numpy DES.  The float32 batch is a pre-filter only; the
+    termination backstop exact-rechecks the ambiguous band (see
+    `trim_ports`).  'auto' engages the batched path on wide fabrics
+    (large union-pair count with enough droppable circuits to amortize
+    the jit) and keeps the serial member sweep on fleet-scale ensembles
+    of small phase DAGs, where that is faster."""
     problems = [DESProblem(m) for m in ensemble.members]
     x = np.asarray(x)
     base = np.array([simulate(p, x).makespan for p in problems])
@@ -600,22 +647,67 @@ def trim_ports_ensemble(ensemble: DagEnsemble, x: np.ndarray,
     earr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
     eu, ev = earr[:, 0], earr[:, 1]
 
+    def exact_fits(xt: np.ndarray) -> bool:
+        return all(simulate(p, xt).makespan <= b
+                   for p, b in zip(problems, budgets))
+
+    droppable_total = int(np.maximum(x[eu, ev] - 1, 0).sum())
+    # the genome view only covers the union pairs: circuits anywhere else
+    # would be invisible to the batched scatter, so fall back to serial
+    off_pair = x.copy()
+    off_pair[eu, ev] = 0
+    off_pair[ev, eu] = 0
+    jd = None
+    if off_pair.sum() == 0 and (
+            backend == "jax"
+            or (backend == "auto"
+                and max(p.n for p in problems) <= GAOptions.jax_task_limit
+                and E >= 16 and droppable_total >= 32)):
+        try:
+            from repro.core.des_jax import EnsembleJaxDES
+            jd = EnsembleJaxDES(problems)
+        except Exception:   # pragma: no cover - jax always available here
+            jd = None
+
     ptr = 0   # cyclic sweep pointer (matches trim_ports' pair ordering)
     while True:
         droppable = np.nonzero(x[eu, ev] > 1)[0]
-        if len(droppable) == 0:
+        k = len(droppable)
+        if k == 0:
             break
+        g0 = x[eu, ev].astype(np.int64)
+        G = np.repeat(g0[None], k, axis=0)
+        G[np.arange(k), droppable] -= 1
+        if jd is not None:
+            pad = E - k
+            batch = np.concatenate([G, np.repeat(G[:1], pad, axis=0)]) \
+                if pad > 0 else G
+            ms, feas = jd.ensemble_genome_makespan(batch, eu, ev)
+            fits, near = _trim_filter_bands(ms, feas, budgets)
+            # a candidate is worth exact-checking only if EVERY member is
+            # in band: one member clearly over budget rejects it outright
+            fits = fits.all(axis=1)[:k]
+            near = near.all(axis=1)[:k]
+        else:
+            fits = np.ones(k, dtype=bool)   # certified serially below
+            near = fits
         accepted = False
-        for i in np.argsort((droppable - ptr) % E, kind="stable"):
-            e = droppable[i]
-            xt = x.copy()
-            xt[eu[e], ev[e]] -= 1
-            xt[ev[e], eu[e]] -= 1
-            if all(simulate(p, xt).makespan <= b
-                   for p, b in zip(problems, budgets)):
-                x = xt
-                ptr = (int(e) + 1) % E
-                accepted = True
+        scan = np.argsort((droppable - ptr) % E, kind="stable")
+        for certify_band in (fits, ~fits & near) if jd is not None \
+                else (fits,):
+            for i in scan:
+                if not certify_band[i]:
+                    continue
+                xt = x.copy()
+                e = droppable[i]
+                xt[eu[e], ev[e]] -= 1
+                xt[ev[e], eu[e]] -= 1
+                if exact_fits(xt):
+                    x = xt
+                    ptr = (int(e) + 1) % E
+                    accepted = True
+                    break
+            if accepted:
                 break
         if not accepted:
             break
@@ -634,13 +726,16 @@ def trim_ports(dag: CommDAG, x: np.ndarray, rel_tol: float = 1e-6,
     shape so XLA compiles once), then accepts the first fitting drop in the
     legacy cyclic sweep order after certifying it against the exact numpy
     DES.  The float32 batch is only a pre-filter (with a conservative
-    1e-3 slack margin): every accept is numpy-certified, so the budget is
-    never violated, and before terminating, any candidates the filter
-    rejected are re-checked serially with the exact DES -- the sweep never
-    stops while a single drop is still acceptable, matching the legacy
-    termination condition.  A float32 false negative mid-round can at most
-    reorder accepts relative to the serial implementation; on the tested
-    workloads the results are identical (see tests/test_ga_vectorized.py).
+    `_TRIM_FILTER_SLACK` margin): every accept is numpy-certified, so the
+    budget is never violated, and before terminating the sweep exact-
+    rechecks the batched scores' ambiguous band -- candidates the filter
+    rejected by less than `_TRIM_BACKSTOP_BAND`, or flagged infeasible by
+    the f32 engine: the only ones a bounded float32 DES error could have
+    misjudged -- so termination needs no serial numpy pass over every
+    clearly-over-budget candidate.  A float32 false
+    negative mid-round can at most reorder accepts relative to the serial
+    implementation; on the tested workloads the results are identical
+    (see tests/test_ga_vectorized.py).
     """
     problem = DESProblem(dag)
     base = simulate(problem, np.asarray(x)).makespan
@@ -686,31 +781,32 @@ def trim_ports(dag: CommDAG, x: np.ndarray, rel_tol: float = 1e-6,
                 if pad else xs
             ms, feas = jd.batch_makespan(batch)
             # float32 filter with slack; every accept is numpy-certified
-            fits = (feas & (ms <= budget * (1 + 1e-3) + 1e-12))[:k]
+            fits, near = _trim_filter_bands(ms, feas, budget)
+            fits, near = fits[:k], near[:k]
         else:
             fits = np.ones(k, dtype=bool)   # certified serially below
+            near = fits
         accepted = False
         scan = np.argsort((droppable - ptr) % E, kind="stable")
-        for i in scan:
-            if not fits[i]:
-                continue
-            if simulate(problem, xs[i]).makespan <= budget:
-                x = xs[i]
-                ptr = (int(droppable[i]) + 1) % E
-                accepted = True
-                break
-        if not accepted and jd is not None and not fits.all():
-            # termination backstop: re-check filter-rejected candidates
-            # with the exact DES so a float32 false negative can never end
-            # the sweep while a drop is still acceptable
+        # first pass: filter-approved candidates; termination backstop:
+        # the batched scores' ambiguous band (~fits & near) -- candidates
+        # the float32 filter rejected by less than _TRIM_BACKSTOP_BAND,
+        # the only ones a bounded f32 DES error could have misjudged.
+        # Rejections beyond the band need no exact re-check, so the
+        # termination round no longer re-simulates every candidate with
+        # the numpy DES.
+        for certify_band in ((fits, ~fits & near) if jd is not None
+                             else (fits,)):
             for i in scan:
-                if fits[i]:
+                if not certify_band[i]:
                     continue
                 if simulate(problem, xs[i]).makespan <= budget:
                     x = xs[i]
                     ptr = (int(droppable[i]) + 1) % E
                     accepted = True
                     break
+            if accepted:
+                break
         if not accepted:
             break
     return x

@@ -76,10 +76,15 @@ class Tenant:
         return scatter(self.local_usage(), self.pods, num_fleet_pods)
 
     def des(self):
-        """Cached JaxDES for batched candidate evaluation (realloc)."""
+        """Cached JaxDES for batched candidate evaluation (realloc).
+
+        Lives on the fleet's hot replanning path, so a compile-bucket miss
+        here (an XLA recompile per surplus pass) is a perf regression worth
+        surfacing -- `warn_on_miss` logs it."""
         if self._des is None:
-            from repro.core.des_jax import JaxDES
-            self._des = JaxDES(DESProblem(self.dag))
+            from repro.core.des_jax import DESOptions, JaxDES
+            self._des = JaxDES(DESProblem(self.dag),
+                               options=DESOptions(warn_on_miss=True))
         return self._des
 
     def xbar(self):
@@ -179,30 +184,37 @@ class AdmissionController:
                               cluster=cluster)
 
     # ------------------------------------------------------------- planning
+    def _solve_single(self, dag: CommDAG, port_min: bool) -> CachedPlan:
+        """One port-aware DELTA-Fast solve of a local-view CommDAG."""
+        problem = DESProblem(dag)
+        P = dag.cluster.num_pods
+        ideal = simulate(problem, np.zeros((P, P)), ideal=True)
+        ga = delta_fast(dag, self.ga_options)
+        x = ga.x
+        if port_min and np.isfinite(ga.makespan):
+            x = trim_ports(dag, x)
+        res = simulate(problem, x)
+        nct = res.comm_time / ideal.comm_time \
+            if ideal.comm_time > 0 else float("inf")
+        return CachedPlan(
+            x=x, makespan=res.makespan, comm_time=res.comm_time,
+            nct=nct, ideal_comm_time=ideal.comm_time,
+            details={"generations": ga.generations,
+                     "evaluations": ga.evaluations,
+                     "port_min": port_min})
+
+    def single_plan(self, dag: CommDAG,
+                    port_min: bool) -> tuple[CachedPlan, bool]:
+        """Cache-backed single-DAG plan (the unit every planning path --
+        admission, robust references, traffic changes -- shares)."""
+        return self.cache.get_or_plan(
+            dag, lambda: self._solve_single(dag, port_min),
+            extra=("delta-fast", port_min))
+
     def plan(self, tenant: Tenant) -> CachedPlan:
         """Port-aware DELTA-Fast solve behind the plan cache; commits the
         resulting allocation to the ledger."""
-
-        def solve() -> CachedPlan:
-            problem = DESProblem(tenant.dag)
-            ideal = simulate(problem, np.zeros((len(tenant.pods),) * 2),
-                             ideal=True)
-            ga = delta_fast(tenant.dag, self.ga_options)
-            x = ga.x
-            if tenant.port_min and np.isfinite(ga.makespan):
-                x = trim_ports(tenant.dag, x)
-            res = simulate(problem, x)
-            nct = res.comm_time / ideal.comm_time \
-                if ideal.comm_time > 0 else float("inf")
-            return CachedPlan(
-                x=x, makespan=res.makespan, comm_time=res.comm_time,
-                nct=nct, ideal_comm_time=ideal.comm_time,
-                details={"generations": ga.generations,
-                         "evaluations": ga.evaluations,
-                         "port_min": tenant.port_min})
-
-        plan, hit = self.cache.get_or_plan(
-            tenant.dag, solve, extra=("delta-fast", tenant.port_min))
+        plan, hit = self.single_plan(tenant.dag, tenant.port_min)
         plan.details["cache_hit"] = hit
         tenant.plan = plan
         tenant.base_plan = plan.copy()
@@ -246,11 +258,27 @@ class AdmissionController:
         if len(members) == 1:
             return self.plan(tenant)
 
+        def member_refs() -> tuple[np.ndarray, int]:
+            """Max-regret reference makespans, amortized through the fleet
+            PlanCache: the refs ARE the members' best single-DAG plans,
+            which the cache already stores from admission / previous phase
+            plans, so they are never re-solved here on a hit."""
+            refs, hits = [], 0
+            for d in members:
+                plan, hit = self.single_plan(d, tenant.port_min)
+                refs.append(plan.makespan)
+                hits += int(hit)
+            return np.asarray(refs, dtype=np.float64), hits
+
         def solve() -> CachedPlan:
+            refs, ref_hits = member_refs()
+            if not (np.isfinite(refs) & (refs > 0)).all():
+                raise ValueError(
+                    f"infeasible member reference plans: {refs}")
             ensemble = DagEnsemble(
                 members, names=[f"phase{i}" for i in range(len(members))])
             rob = delta_robust(ensemble, self.ga_options,
-                               objective=objective)
+                               objective=objective, refs=refs)
             x = rob.x
             makespans = rob.makespans
             if tenant.port_min and rob.feasible:
@@ -271,6 +299,7 @@ class AdmissionController:
                 nct=nct, ideal_comm_time=ideal.comm_time,
                 details={"robust": True, "objective": objective,
                          "port_min": tenant.port_min,
+                         "ref_cache_hits": ref_hits,
                          "num_members": len(members),
                          "member_makespans": makespans.tolist(),
                          "member_regrets": (makespans / rob.refs).tolist(),

@@ -269,6 +269,7 @@ class FleetPlanner:
 
     # ------------------------------------------------------------- reports
     def report(self) -> dict:
+        from repro.core.des_jax import des_cache_stats
         return {
             "tenants": {
                 name: {"pods": list(t.pods), "nct": t.plan.nct,
@@ -279,6 +280,9 @@ class FleetPlanner:
                 for name, t in self.tenants.items() if t.plan is not None},
             "ledger": self.ledger.snapshot(),
             "cache": self.cache.stats(),
+            # jit churn accounting: misses are XLA recompiles; a healthy
+            # fleet loop is all hits after warm-up (process-wide counters)
+            "des_cache": des_cache_stats(),
             "realloc": {"batches": self.realloc_batches,
                         "candidates": self.realloc_candidates},
         }

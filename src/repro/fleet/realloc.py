@@ -266,8 +266,11 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
                            np.asarray(boosted_limits, dtype=np.int64),
                            eu, ev, rng, num_random=num_random)
     if des is None:
-        from repro.core.des_jax import JaxDES
-        des = JaxDES(problem)
+        # reallocation runs inside the fleet's replanning loop: a
+        # compile-bucket miss here recompiles XLA per surplus pass, so
+        # surface it (the bucketed cache makes it a one-off per shape)
+        from repro.core.des_jax import DESOptions, JaxDES
+        des = JaxDES(problem, options=DESOptions(warn_on_miss=True))
     # ONE fused genome-scatter + vmap call over the whole portfolio
     ms, feas = des.batch_genome_makespan(G, eu, ev)
     score = np.where(feas, ms, INF)

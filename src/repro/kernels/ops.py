@@ -89,3 +89,17 @@ def fill_matvec(w, rhs, *, backend: str | None = None,
             w, rhs, interpret=bool(interpret if interpret is not None
                                    else not _on_tpu()))
     return _ref.fill_matvec_ref(jnp.asarray(w), jnp.asarray(rhs))
+
+
+def fill_round(w, level, unfrozen, *, backend: str | None = None,
+               interpret: bool | None = None):
+    """One DES max-min filling round: per-constraint (used, denom) from one
+    fused pass over the incidence matrix (the `repro.core.des_jax._maxmin`
+    inner reduction; called once per saturation level of every event)."""
+    if _pick(backend) == "pallas":
+        return _waterfill_k.fill_round(
+            w, level, unfrozen,
+            interpret=bool(interpret if interpret is not None
+                           else not _on_tpu()))
+    return _ref.fill_round_ref(jnp.asarray(w), jnp.asarray(level),
+                               jnp.asarray(unfrozen))

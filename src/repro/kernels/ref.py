@@ -53,3 +53,10 @@ def fill_matvec_ref(w: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
     returns (C, R) = w @ rhs in float32.
     """
     return w.astype(jnp.float32) @ rhs.astype(jnp.float32)
+
+
+def fill_round_ref(w: jnp.ndarray, level: jnp.ndarray,
+                   unfrozen: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One DES fair-share filling round: per-constraint (used, denom)."""
+    out = fill_matvec_ref(w, jnp.stack([level, unfrozen], axis=1))
+    return out[:, 0], out[:, 1]

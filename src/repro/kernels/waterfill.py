@@ -11,6 +11,14 @@ wastes 127/128 lanes, so we stack the two right-hand sides into an (N, R)
 matrix padded to R=128 lanes: the extra lanes are free (the systolic array
 processes 128 lanes regardless), and W -- the bandwidth-dominant operand --
 is streamed through VMEM exactly once for both reductions.
+
+`fill_round` is the per-event DES layout of the same kernel: it takes the
+two per-task vectors of one filling round (active flow levels, unfrozen
+mask) and returns the per-constraint `(used, denom)` pair.  The DES event
+loop (`repro.core.des_jax._maxmin`) calls it once per filling round; it is
+vmap-safe (batched over GA populations and ensemble members) and runs in
+interpret mode off-TPU, where `repro.kernels.ref.fill_round_ref` is the
+production fallback.
 """
 from __future__ import annotations
 
@@ -62,3 +70,17 @@ def fill_matvec(w: jax.Array, rhs: jax.Array, *, bc: int = 128,
         interpret=interpret,
     )(w, rhs)
     return out[:c, :r]
+
+
+def fill_round(w: jax.Array, level: jax.Array, unfrozen: jax.Array, *,
+               interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """One DES fair-share filling round: per-constraint (used, denom).
+
+    w:        (C, N) constraint-task incidence weights
+    level:    (N,)   current active flow levels (phi * active)
+    unfrozen: (N,)   unfrozen-task mask (float)
+    Both reductions share one pass over `w` (stacked 2-lane RHS).
+    """
+    rhs = jnp.stack([level, unfrozen], axis=1)
+    out = fill_matvec(w, rhs, interpret=interpret)
+    return out[:, 0], out[:, 1]

@@ -89,6 +89,23 @@ def test_fill_matvec_shapes(shape, rhs_cols):
     assert np.allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("shape", [(3, 5), (34, 273), (130, 64)])
+def test_fill_round_matches_matvec(shape):
+    """The DES-round layout (level, unfrozen) -> (used, denom) is the same
+    fused kernel pass as the stacked 2-lane matvec."""
+    c, n = shape
+    w = (RNG.random((c, n)) * (RNG.random((c, n)) < 0.3)).astype(np.float32)
+    level = RNG.random(n).astype(np.float32)
+    unfrozen = (RNG.random(n) < 0.5).astype(np.float32)
+    for backend in ("pallas", "ref"):
+        used, denom = ops.fill_round(w, level, unfrozen, backend=backend,
+                                     interpret=True)
+        assert np.allclose(np.asarray(used), w @ level, rtol=1e-5,
+                           atol=1e-5)
+        assert np.allclose(np.asarray(denom), w @ unfrozen, rtol=1e-5,
+                           atol=1e-5)
+
+
 @settings(max_examples=15, deadline=None)
 @given(st.integers(2, 40), st.integers(0, 2**31 - 1))
 def test_property_closure_idempotent(n, seed):

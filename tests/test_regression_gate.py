@@ -12,8 +12,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import (SUITE_TOL, main,  # noqa: E402
-                                         parse_derived)
+from benchmarks.check_regression import (REQUIRED_ROWS,  # noqa: E402
+                                         SUITE_TOL, main, parse_derived)
 
 
 def _payload():
@@ -142,6 +142,54 @@ def test_extra_fresh_rows_are_fine(tmp_path):
     fresh["rows"].append({"name": "ga/new-row", "us_per_call": 1.0,
                           "derived": "makespan=123.0"})
     assert _run(tmp_path, fresh) == 0
+
+
+def _robust_payload():
+    return {
+        "suite": "robust", "full": False, "seconds": 6.0, "error": None,
+        "rows": [
+            {"name": "robust/gpt7b-phase/max-regret",
+             "us_per_call": 2_000_000.0,
+             "derived": "worst_regret=1.0343;ports=14"},
+            {"name": "robust/suite_wall", "us_per_call": 6_000_000.0,
+             "derived": "seconds=6.00;des_compiles=3"},
+        ],
+    }
+
+
+def test_required_robust_wall_row_present_passes(tmp_path):
+    assert REQUIRED_ROWS["robust"] == ("robust/suite_wall",)
+    p = _robust_payload()
+    _write(tmp_path / "base", p, suite="robust")
+    _write(tmp_path / "fresh", p, suite="robust")
+    assert main(["--baseline-dir", str(tmp_path / "base"),
+                 "--fresh-dir", str(tmp_path / "fresh"),
+                 "--suites", "robust"]) == 0
+
+
+def test_required_suite_missing_baseline_file_fails(tmp_path):
+    """A suite with pinned rows must not lose its whole gate by losing
+    the committed baseline file (other suites still skip cleanly)."""
+    _write(tmp_path / "fresh", _robust_payload(), suite="robust")
+    os.makedirs(tmp_path / "base", exist_ok=True)
+    assert main(["--baseline-dir", str(tmp_path / "base"),
+                 "--fresh-dir", str(tmp_path / "fresh"),
+                 "--suites", "robust"]) == 1
+
+
+def test_required_robust_wall_row_missing_fails(tmp_path):
+    """Dropping the robust suite-total wall row from EITHER side fails:
+    the row pins the fused-DES engine wins."""
+    full = _robust_payload()
+    bare = _robust_payload()
+    bare["rows"] = [r for r in bare["rows"]
+                    if r["name"] != "robust/suite_wall"]
+    for base_p, fresh_p in ((full, bare), (bare, full)):
+        _write(tmp_path / "base", base_p, suite="robust")
+        _write(tmp_path / "fresh", fresh_p, suite="robust")
+        assert main(["--baseline-dir", str(tmp_path / "base"),
+                     "--fresh-dir", str(tmp_path / "fresh"),
+                     "--suites", "robust"]) == 1
 
 
 def test_committed_baselines_pass_against_themselves():
