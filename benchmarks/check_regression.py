@@ -124,6 +124,17 @@ def compare_suite(suite: str, base: dict, fresh: dict, metric_tol: float,
                 problems.append(
                     f"{suite}: {name} wall clock {f_us:.0f}us vs baseline "
                     f"{b_us:.0f}us (x{ratio:.2f} > x{wall_ratio:.2f})")
+        # span summaries (from `benchmarks.run --trace`): carried into the
+        # report so baseline diffs can attribute a wall-clock move to jit
+        # churn vs simulate vs solver time, but NOT gated on -- tracing is
+        # optional and the summaries depend on whether a side ran traced
+        for side, row in (("base", brow), ("fresh", frow)):
+            spans = row.get("spans")
+            if spans:
+                parts = ", ".join(
+                    f"{k}:{v['total_s']:.3f}s/{v['count']}"
+                    for k, v in sorted(spans.items()))
+                lines.append(f"{name:<44} spans({side}) {parts}")
         # quality metrics
         bm = parse_derived(brow.get("derived", ""))
         fm = parse_derived(frow.get("derived", ""))

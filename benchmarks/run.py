@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.run           # reduced scale
     PYTHONPATH=src python -m benchmarks.run --full    # paper scale
     PYTHONPATH=src python -m benchmarks.run --only fig6,roofline
+    PYTHONPATH=src python -m benchmarks.run --trace   # + span summaries
 
 Prints ``name,us_per_call,derived`` CSV (also written to
 experiments/bench/results.csv) and, per suite, a machine-readable
@@ -10,6 +11,14 @@ experiments/bench/results.csv) and, per suite, a machine-readable
 repo root, where the cross-PR perf-trajectory tooling reads it (the
 smoke-sized des/ga/tab1 files are committed with each PR; CI runs the same
 smoke command and uploads the results as artifacts).
+
+With ``--trace`` (or ``$REPRO_BENCH_TRACE=1``) the repro.obs tracer runs
+for the whole suite and every row carries a ``spans`` dict -- the per-row
+delta of the span summary (count / total seconds per span name), i.e. the
+jit-vs-simulate-vs-solver decomposition of that row's wall clock.  The
+regression gate carries these fields but does not gate on them; the CI
+smoke runs WITHOUT --trace so the wall-clock gate measures the default
+(disabled, near-zero-cost) configuration.
 """
 from __future__ import annotations
 
@@ -26,12 +35,33 @@ SUITES = ("tab1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
           "fleet", "kernels", "des", "ga", "robust", "roofline")
 
 
+def _span_delta(before: dict, after: dict) -> dict:
+    """Per-row span summary: what the tracer accumulated since the last
+    yielded row, as {span name: {count, total_s}} (max_s is a running
+    maximum, not a delta, so it is dropped here)."""
+    out = {}
+    for name, row in after.items():
+        prev = before.get(name, {"count": 0, "total_s": 0.0})
+        count = row["count"] - prev["count"]
+        if count > 0:
+            out[name] = {"count": int(count),
+                         "total_s": round(row["total_s"] - prev["total_s"],
+                                          6)}
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale microbatches and solver budgets")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--trace", action="store_true",
+                    default=os.environ.get("REPRO_BENCH_TRACE", "0")
+                    not in ("0", ""),
+                    help="enable repro.obs tracing; attach per-row span "
+                         "summaries (jit vs simulate vs solver time) to "
+                         "the BENCH_*.json payloads")
     args = ap.parse_args()
     picked = [s.strip() for s in args.only.split(",") if s.strip()] or \
         list(SUITES)
@@ -42,6 +72,10 @@ def main() -> None:
                             kernels_bench, robust_bench, roofline,
                             tab1_workloads)
     from benchmarks.common import OUT_DIR, save_json
+    from repro.obs import TRACER
+
+    if args.trace:
+        TRACER.enable()
 
     modules = {"tab1": tab1_workloads, "fig6": fig6_bandwidth,
                "fig7": fig7_rates, "fig8": fig8_seqlen,
@@ -61,11 +95,18 @@ def main() -> None:
         mod = modules[s]
         t0 = time.time()
         rows = []
+        row_spans = []
         error = None
+        TRACER.clear()
+        prev_summary: dict = {}
         try:
             for row in mod.run(full=args.full):
                 rows.append(row)
                 lines.append(row.emit())
+                if args.trace:
+                    cur = TRACER.summary()
+                    row_spans.append(_span_delta(prev_summary, cur))
+                    prev_summary = cur
         except Exception as exc:   # noqa: BLE001
             failures.append(s)
             error = f"{type(exc).__name__}: {exc}"
@@ -77,6 +118,11 @@ def main() -> None:
             "suite": s, "full": args.full, "seconds": dt, "error": error,
             "rows": [{"name": r.name, "us_per_call": r.us_per_call,
                       "derived": r.derived} for r in rows]}
+        if args.trace:
+            for rdict, spans in zip(payload["rows"], row_spans):
+                if spans:
+                    rdict["spans"] = spans
+            payload["spans"] = TRACER.summary()
         save_json(f"BENCH_{s}", payload)
         # mirror to the repo root: the growth loop's perf trajectory reads
         # BENCH_*.json from there, not from experiments/bench/

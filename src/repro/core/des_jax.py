@@ -35,7 +35,6 @@ the exact-shape simulation up to float summation order.
 from __future__ import annotations
 
 import functools
-import logging
 import math
 import os
 from collections import OrderedDict
@@ -47,10 +46,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.des import DESProblem
+from repro.obs import get_counter, get_gauge, get_logger, span
 
 INF = jnp.inf
 
-_log = logging.getLogger("repro.des_jax")
+_log = get_logger("repro.des_jax")
+
+# compile-cache accounting lives in the shared metrics registry so callers
+# (e.g. a FleetPlanner) can read *scoped* deltas instead of process-wide
+# totals; `des_cache_stats()` stays the dict-shaped view of the same series
+_HITS = get_counter("des_compile_hits_total",
+                    "simulator constructions reusing a compiled bucket")
+_MISSES = get_counter("des_compile_miss_total",
+                      "simulator constructions forcing an XLA recompile")
+_EVICTIONS = get_counter("des_compile_evictions_total",
+                         "compile-cache LRU evictions")
+_ENTRIES = get_gauge("des_compile_cache_entries",
+                     "live compile-cache buckets")
 
 MAXMIN_BACKENDS = ("auto", "pallas", "ref", "segment")
 
@@ -451,16 +463,34 @@ class CompiledDES:
         x = jnp.zeros((P, P), dtype=g.dtype)
         return x.at[eu, ev].set(g).at[ev, eu].set(g)
 
+    def _traced(self, entry: str, fn):
+        """First-call `des.jit` span around a jitted entry point: the
+        first invocation pays trace + XLA compile, so its duration IS the
+        jit cost the benchmark span summaries separate from steady-state
+        simulate time.  (Later batch-shape recompiles inside jax's own
+        per-shape cache are not individually distinguished.)"""
+        cfg = self.cfg
+        state = {"first": True}
+
+        def wrapper(*args):
+            if state["first"]:
+                state["first"] = False
+                with span("des.jit", entry=entry, n=cfg.n,
+                          members=cfg.members, backend=cfg.backend):
+                    return fn(*args)
+            return fn(*args)
+        return wrapper
+
     @functools.cached_property
     def single(self):
-        return jax.jit(self._run)
+        return self._traced("single", jax.jit(self._run))
 
     @functools.cached_property
     def batch_x(self):
         def f(leaves, xs):
             return jax.vmap(
                 lambda x: self._run(leaves, x, jnp.asarray(False))[:2])(xs)
-        return jax.jit(f)
+        return self._traced("batch_x", jax.jit(f))
 
     @functools.cached_property
     def batch_genomes(self):
@@ -469,7 +499,7 @@ class CompiledDES:
                 return self._run(leaves, self._scatter(g, eu, ev),
                                  jnp.asarray(False))[:2]
             return jax.vmap(one)(genomes)
-        return jax.jit(f)
+        return self._traced("batch_genomes", jax.jit(f))
 
     @functools.cached_property
     def ensemble_genomes(self):
@@ -480,11 +510,12 @@ class CompiledDES:
             x = self._scatter(g, eu, ev)
             return jax.vmap(one_member, in_axes=(0, None))(leaves, x)
 
-        return jax.jit(jax.vmap(one_genome, in_axes=(None, 0, None, None)))
+        return self._traced(
+            "ensemble_genomes",
+            jax.jit(jax.vmap(one_genome, in_axes=(None, 0, None, None))))
 
 
 _COMPILE_CACHE: OrderedDict[tuple, CompiledDES] = OrderedDict()
-_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
 
 def _cache_max() -> int:
@@ -494,14 +525,19 @@ def _cache_max() -> int:
 def des_cache_stats() -> dict:
     """Module-level compile-cache counters: `hits` are simulator
     constructions that reused an existing bucket's jitted executables,
-    `misses` forced a fresh XLA compile."""
-    return dict(_CACHE_STATS, entries=len(_COMPILE_CACHE))
+    `misses` forced a fresh XLA compile.  Backed by the `repro.obs`
+    registry (`des_compile_*` series), so planner-scoped deltas are
+    available via `REGISTRY.scope()`."""
+    return {"hits": int(_HITS.value()), "misses": int(_MISSES.value()),
+            "evictions": int(_EVICTIONS.value()),
+            "entries": len(_COMPILE_CACHE)}
 
 
 def des_cache_clear() -> None:
     _COMPILE_CACHE.clear()
-    for k in _CACHE_STATS:
-        _CACHE_STATS[k] = 0
+    for c in (_HITS, _MISSES, _EVICTIONS):
+        c.reset()
+    _ENTRIES.set(0)
 
 
 def _compiled_for(cfg: _StaticCfg, pad: PadSpec,
@@ -509,10 +545,13 @@ def _compiled_for(cfg: _StaticCfg, pad: PadSpec,
     key = (cfg, pad.d, pad.e)
     ent = _COMPILE_CACHE.get(key)
     if ent is not None:
-        _CACHE_STATS["hits"] += 1
+        _HITS.inc()
         _COMPILE_CACHE.move_to_end(key)
         return ent
-    _CACHE_STATS["misses"] += 1
+    # jit churn: every miss increments des_compile_miss_total whether or
+    # not the caller opted into the warning, so the counter is the one
+    # authoritative recompile signal (the log line is just its echo)
+    _MISSES.inc()
     if warn_on_miss:
         _log.warning(
             "DES compile-cache miss: new bucket n=%d deps=%d inc=%d "
@@ -524,7 +563,8 @@ def _compiled_for(cfg: _StaticCfg, pad: PadSpec,
     _COMPILE_CACHE[key] = ent
     while len(_COMPILE_CACHE) > _cache_max():
         _COMPILE_CACHE.popitem(last=False)
-        _CACHE_STATS["evictions"] += 1
+        _EVICTIONS.inc()
+    _ENTRIES.set(len(_COMPILE_CACHE))
     return ent
 
 
@@ -552,21 +592,26 @@ class JaxDES:
         self._leaves = tuple(getattr(self.arrays, f) for f in _ARRAY_FIELDS)
 
     def makespan(self, x, ideal: bool = False) -> float:
-        ms, _, _, _ = self._compiled.single(self._leaves, jnp.asarray(x),
-                                            jnp.asarray(ideal))
-        return float(ms)
+        with span("des.simulate", entry="single", n=self.pad.n):
+            ms, _, _, _ = self._compiled.single(
+                self._leaves, jnp.asarray(x), jnp.asarray(ideal))
+            return float(ms)
 
     def simulate(self, x, ideal: bool = False):
-        ms, feas, start, finish = self._compiled.single(
-            self._leaves, jnp.asarray(x), jnp.asarray(ideal))
-        n = self.problem.n    # strip bucket-padding ghost tasks
-        return (float(ms), bool(feas), np.asarray(start)[:n],
-                np.asarray(finish)[:n])
+        with span("des.simulate", entry="single", n=self.pad.n):
+            ms, feas, start, finish = self._compiled.single(
+                self._leaves, jnp.asarray(x), jnp.asarray(ideal))
+            n = self.problem.n    # strip bucket-padding ghost tasks
+            return (float(ms), bool(feas), np.asarray(start)[:n],
+                    np.asarray(finish)[:n])
 
     def batch_makespan(self, xs) -> tuple[np.ndarray, np.ndarray]:
         """Makespans + feasibility for a (pop, P, P) batch of topologies."""
-        ms, feas = self._compiled.batch_x(self._leaves, jnp.asarray(xs))
-        return np.asarray(ms), np.asarray(feas)
+        xs = jnp.asarray(xs)
+        with span("des.simulate", entry="batch_x", n=self.pad.n,
+                  pop=int(xs.shape[0])):
+            ms, feas = self._compiled.batch_x(self._leaves, xs)
+            return np.asarray(ms), np.asarray(feas)
 
     def batch_genome_makespan(self, genomes, edge_u, edge_v
                               ) -> tuple[np.ndarray, np.ndarray]:
@@ -574,11 +619,14 @@ class JaxDES:
         onto (pop, P, P) topologies *on device* and simulate, all in one
         jitted call -- one host->device transfer for the genomes, one
         device->host for (makespan, feasible), independent of pop size."""
-        ms, feas = self._compiled.batch_genomes(
-            self._leaves, jnp.asarray(genomes),
-            jnp.asarray(edge_u, dtype=jnp.int32),
-            jnp.asarray(edge_v, dtype=jnp.int32))
-        return np.asarray(ms), np.asarray(feas)
+        genomes = jnp.asarray(genomes)
+        with span("des.simulate", entry="batch_genomes", n=self.pad.n,
+                  pop=int(genomes.shape[0])):
+            ms, feas = self._compiled.batch_genomes(
+                self._leaves, genomes,
+                jnp.asarray(edge_u, dtype=jnp.int32),
+                jnp.asarray(edge_v, dtype=jnp.int32))
+            return np.asarray(ms), np.asarray(feas)
 
 
 # ------------------------------------------------------------------ ensemble
@@ -651,11 +699,14 @@ class EnsembleJaxDES:
         """(pop, E) genomes over the union pairs -> (pop, M) makespans and
         feasibility, one fused jitted call (scatter + members x genomes
         vmap'd `_simulate`)."""
-        ms, feas = self._compiled.ensemble_genomes(
-            self._leaves, jnp.asarray(genomes),
-            jnp.asarray(edge_u, dtype=jnp.int32),
-            jnp.asarray(edge_v, dtype=jnp.int32))
-        return np.asarray(ms), np.asarray(feas)
+        genomes = jnp.asarray(genomes)
+        with span("des.simulate", entry="ensemble_genomes", n=self.pad.n,
+                  pop=int(genomes.shape[0]), members=len(self.problems)):
+            ms, feas = self._compiled.ensemble_genomes(
+                self._leaves, genomes,
+                jnp.asarray(edge_u, dtype=jnp.int32),
+                jnp.asarray(edge_v, dtype=jnp.int32))
+            return np.asarray(ms), np.asarray(feas)
 
     def makespans(self, x) -> tuple[np.ndarray, np.ndarray]:
         """Per-member (makespan, feasible) for one symmetric (P, P)

@@ -33,6 +33,13 @@ import numpy as np
 from repro.core.dag import CommDAG, DagEnsemble
 from repro.core.des import DESProblem, simulate
 from repro.core.xbound import x_upper_bound
+from repro.obs import get_counter, span
+
+_GENERATIONS = get_counter(
+    "ga_generations_total", "GA generations executed")
+_EVALUATIONS = get_counter(
+    "ga_fitness_evaluations_total",
+    "unique genomes scored by the DES (cache misses)")
 
 if TYPE_CHECKING:   # pragma: no cover - annotation-only import
     from repro.core.des_jax import DESOptions
@@ -285,7 +292,10 @@ class _CachedFitness:
         miss = [i for i, key in enumerate(keys) if key not in self.cache]
         if miss:
             self.evaluations += len(miss)
-            vals = self._raw_scores(uniq[miss])
+            _EVALUATIONS.inc(len(miss))
+            with span("ga.fitness_batch", pop=len(G), unique=len(uniq),
+                      misses=len(miss)):
+                vals = self._raw_scores(uniq[miss])
             sums = uniq[miss].sum(axis=1)
             for i, v, s in zip(miss, vals, sums):
                 score = float(v)
@@ -378,13 +388,15 @@ def _evolve(space: TopologySpace, fit, opts: GAOptions,
     for gen in range(1, opts.max_generations + 1):
         if time.time() - t0 > opts.time_limit or stall >= opts.patience:
             break
-        order = np.argsort(fitness, kind="stable")
-        elite = pop[order[:n_elite]]
-        children = _variation_batch(pop, fitness, space, opts, rng,
-                                    num_children)
-        children, _ = space.repair_batch(children, rng)
-        pop = np.concatenate([elite, children], axis=0)
-        fitness = fit(pop)
+        with span("ga.generation", gen=gen, pop=opts.pop_size):
+            order = np.argsort(fitness, kind="stable")
+            elite = pop[order[:n_elite]]
+            children = _variation_batch(pop, fitness, space, opts, rng,
+                                        num_children)
+            children, _ = space.repair_batch(children, rng)
+            pop = np.concatenate([elite, children], axis=0)
+            fitness = fit(pop)
+        _GENERATIONS.inc()
         i = int(np.argmin(fitness))
         if fitness[i] < best_f - 1e-15:
             best_f, best_g = float(fitness[i]), pop[i].copy()
@@ -412,7 +424,9 @@ def delta_fast(dag: CommDAG, opts: GAOptions | None = None,
                         evaluations=1, elapsed=time.time() - t0,
                         history=[float(ms)], feasible=np.isfinite(ms))
 
-    best_g, _, history, gen = _evolve(space, fit, opts, rng, t0, seeds)
+    with span("ga.evolve", kind="delta_fast", pop=opts.pop_size,
+              edges=space.E):
+        best_g, _, history, gen = _evolve(space, fit, opts, rng, t0, seeds)
 
     # re-rank the best distinct candidates with the exact numpy DES (the
     # batched jax fitness may run in float32; ~1e-5 ranking noise)
@@ -586,7 +600,9 @@ def delta_robust(ensemble: DagEnsemble, opts: GAOptions | None = None,
             evaluations=1, elapsed=time.time() - t_start, history=[obj],
             feasible=bool(np.isfinite(ms).all()))
 
-    best_g, _, history, gen = _evolve(space, fit, opts, rng, t0, seeds)
+    with span("ga.evolve", kind="delta_robust", pop=opts.pop_size,
+              edges=space.E, members=ensemble.num_members):
+        best_g, _, history, gen = _evolve(space, fit, opts, rng, t0, seeds)
 
     # re-rank the top distinct candidates with the exact numpy DES per
     # member (same float32-noise guard as delta_fast)

@@ -35,8 +35,12 @@ from repro.core.des import DESProblem, DESResult, simulate
 from repro.core.pruning import (IndexWindows, estimate_t_up, profile_anchors,
                                 task_time_index_pruning)
 from repro.core.xbound import x_upper_bound
+from repro.obs import get_counter, span
 
 VOL = 1e9  # internal volume unit (GB)
+
+_SOLVES = get_counter("milp_solves_total",
+                      "MILP solver invocations by terminal status")
 
 
 @dataclass
@@ -120,31 +124,35 @@ class _Model:
         self.row_ub.append(ub)
         self.nrow += 1
 
-    def solve(self, time_limit: float, mip_rel_gap: float, verbose: bool
-              ) -> tuple[str, np.ndarray | None, dict]:
-        c = np.zeros(self.nvar)
-        for j, v in self.obj.items():
-            c[j] = v
-        A = sp.csc_matrix(
-            (self.rows_v, (self.rows_i, self.rows_j)),
-            shape=(self.nrow, self.nvar))
-        res = milp(
-            c=c,
-            constraints=LinearConstraint(A, np.asarray(self.row_lb),
-                                         np.asarray(self.row_ub)),
-            bounds=Bounds(np.asarray(self.lb), np.asarray(self.ub)),
-            integrality=np.asarray(self.integrality),
-            options={"time_limit": time_limit, "mip_rel_gap": mip_rel_gap,
-                     "disp": verbose},
-        )
-        status = {0: "optimal", 1: "iteration_limit", 2: "infeasible",
-                  3: "unbounded", 4: "error"}.get(res.status, "error")
-        if status == "iteration_limit" and res.x is not None:
-            status = "time_limit"
-        info = {"mip_gap": getattr(res, "mip_gap", None),
-                "nvars": self.nvar, "nrows": self.nrow,
-                "message": res.message}
-        return status, res.x, info
+    def solve(self, time_limit: float, mip_rel_gap: float, verbose: bool,
+              phase: str = "main") -> tuple[str, np.ndarray | None, dict]:
+        with span("milp.solve", phase=phase, nvars=self.nvar,
+                  nrows=self.nrow) as sp_:
+            c = np.zeros(self.nvar)
+            for j, v in self.obj.items():
+                c[j] = v
+            A = sp.csc_matrix(
+                (self.rows_v, (self.rows_i, self.rows_j)),
+                shape=(self.nrow, self.nvar))
+            res = milp(
+                c=c,
+                constraints=LinearConstraint(A, np.asarray(self.row_lb),
+                                             np.asarray(self.row_ub)),
+                bounds=Bounds(np.asarray(self.lb), np.asarray(self.ub)),
+                integrality=np.asarray(self.integrality),
+                options={"time_limit": time_limit,
+                         "mip_rel_gap": mip_rel_gap, "disp": verbose},
+            )
+            status = {0: "optimal", 1: "iteration_limit", 2: "infeasible",
+                      3: "unbounded", 4: "error"}.get(res.status, "error")
+            if status == "iteration_limit" and res.x is not None:
+                status = "time_limit"
+            sp_.set(status=status)
+            _SOLVES.inc(phase=phase, status=status)
+            info = {"mip_gap": getattr(res, "mip_gap", None),
+                    "nvars": self.nvar, "nrows": self.nrow,
+                    "message": res.message}
+            return status, res.x, info
 
 
 @dataclass
@@ -457,7 +465,8 @@ def solve_delta_milp(dag: CommDAG, opts: MILPOptions | None = None
     xbar = opts.xbar if opts.xbar is not None else \
         x_upper_bound(dag, t_up=t_up)
 
-    md, lay = _build(dag, opts, windows, xbar, t_up)
+    with span("milp.build", K=K, tasks=dag.num_tasks):
+        md, lay = _build(dag, opts, windows, xbar, t_up)
     md.obj = {lay.C: 1.0}
     prep_time = time.time() - t0
 
@@ -468,7 +477,7 @@ def solve_delta_milp(dag: CommDAG, opts: MILPOptions | None = None
         md_hot = _apply_hot_start(md, lay, dag, baseline, t_up)
         md_hot.obj = {lay.C: 1.0}
         st_h, z_h, _ = md_hot.solve(min(opts.time_limit / 4, 60.0),
-                                    1e-3, False)
+                                    1e-3, False, phase="hot_start")
         if st_h in ("optimal", "time_limit") and z_h is not None:
             cand = float(z_h[lay.C]) * (1 + 1e-6) + 1e-9
             incumbent = min(incumbent, cand) if incumbent else cand
@@ -499,7 +508,7 @@ def solve_delta_milp(dag: CommDAG, opts: MILPOptions | None = None
         md.ub[lay.C] = result.makespan * (1 + 1e-6) + 1e-9
         md.obj = {int(lay.x[e]): 1.0 for e in range(len(lay.edges))}
         st2, z2, info2 = md.solve(opts.time_limit, opts.mip_rel_gap,
-                                  opts.verbose)
+                                  opts.verbose, phase="port_min")
         if st2 in ("optimal", "time_limit") and z2 is not None:
             r2 = _extract(dag, md, lay, z2, st2, time.time() - tp,
                           {**result.stats, "phase2": info2})
@@ -605,14 +614,15 @@ def solve_robust_milp(ensemble: DagEnsemble,
             x_upper_bound(dag_m, t_up=t_up)
         xbar_u = xbar if xbar_u is None else np.maximum(xbar_u, xbar)
 
-    md = _Model()
-    edges = ensemble.undirected_pairs()
-    xv, beta, Lbits, edge_of = _build_topology(md, ensemble.cluster, edges,
-                                               xbar_u)
-    lays = [_build_member(md, dag_m, opts.fairness, win, t_up, edges,
-                          edge_of, xv, beta, Lbits)
-            for dag_m, win, t_up in zip(ensemble.members, windows_m,
-                                        t_up_m)]
+    with span("milp.build", members=ensemble.num_members):
+        md = _Model()
+        edges = ensemble.undirected_pairs()
+        xv, beta, Lbits, edge_of = _build_topology(md, ensemble.cluster,
+                                                   edges, xbar_u)
+        lays = [_build_member(md, dag_m, opts.fairness, win, t_up, edges,
+                              edge_of, xv, beta, Lbits)
+                for dag_m, win, t_up in zip(ensemble.members, windows_m,
+                                            t_up_m)]
 
     # ---- objective
     if objective == "weighted":
@@ -672,7 +682,7 @@ def solve_robust_milp(ensemble: DagEnsemble,
             md.ub[Z] = obj_of(z) * (1 + 1e-6) + 1e-9
         md.obj = {int(xv[e]): 1.0 for e in range(len(edges))}
         st2, z2, info2 = md.solve(opts.time_limit, opts.mip_rel_gap,
-                                  opts.verbose)
+                                  opts.verbose, phase="port_min")
         if st2 in ("optimal", "time_limit") and z2 is not None:
             status, z = st2, z2
             stats["phase2"] = info2

@@ -27,6 +27,15 @@ from repro.core.schedule import build_comm_dag
 from repro.core.traffic import JobSpec
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
 from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
+from repro.obs import get_counter, get_logger, span
+
+_log = get_logger("repro.fleet")
+_PLANS = get_counter("fleet_plans_total",
+                     "tenant planning solves, by path and cache outcome")
+_ROBUST_DEGRADED = get_counter(
+    "fleet_robust_degraded_total",
+    "robust replans degraded to a single-DAG plan (empty union space or "
+    "infeasible member references)")
 
 
 @dataclass(frozen=True)
@@ -157,8 +166,9 @@ class AdmissionController:
                 f"{ent.tolist()} (donated ports stay reserved)")
         self.ledger.admit(name, scatter(ent, pods, self.fleet.num_pods))
         try:
-            tenant = self._build_and_plan(name, job, pods, reverse_stages,
-                                          port_min)
+            with span("fleet.admit", tenant=name, pods=len(pods)):
+                tenant = self._build_and_plan(name, job, pods,
+                                              reverse_stages, port_min)
         except Exception:
             self.ledger.release(name)
             raise
@@ -214,7 +224,10 @@ class AdmissionController:
     def plan(self, tenant: Tenant) -> CachedPlan:
         """Port-aware DELTA-Fast solve behind the plan cache; commits the
         resulting allocation to the ledger."""
-        plan, hit = self.single_plan(tenant.dag, tenant.port_min)
+        with span("fleet.plan", tenant=tenant.name) as sp:
+            plan, hit = self.single_plan(tenant.dag, tenant.port_min)
+            sp.set(cache_hit=bool(hit))
+        _PLANS.inc(path="single", cache="hit" if hit else "miss")
         plan.details["cache_hit"] = hit
         tenant.plan = plan
         tenant.base_plan = plan.copy()
@@ -309,19 +322,27 @@ class AdmissionController:
                          "evaluations": rob.evaluations})
 
         try:
-            plan, hit = self.cache.get_or_plan(
-                tenant.dag, solve,
-                extra=("delta-robust", objective, tenant.port_min,
-                       tuple(sorted(sigs))))
-        except ValueError:
+            with span("fleet.plan_robust", tenant=tenant.name,
+                      members=len(members)):
+                plan, hit = self.cache.get_or_plan(
+                    tenant.dag, solve,
+                    extra=("delta-robust", objective, tenant.port_min,
+                           tuple(sorted(sigs))))
+        except ValueError as exc:
             # the robust search space can be empty even when every phase
             # plans fine alone: the *union* of active pairs may exceed a
             # pod's port budget (one circuit per incident pair is the
             # connectivity floor), and an incumbent member may have become
             # unplannable under the current limits (infeasible refs).
             # Degrade to the current-DAG plan instead of killing the
-            # online replanning loop.
+            # online replanning loop -- but never silently: the counter is
+            # the authoritative degrade signal, the log line its echo.
+            _ROBUST_DEGRADED.inc()
+            _log.warning(
+                "robust replan for tenant %r degraded to a single-DAG "
+                "plan (%d members): %s", tenant.name, len(members), exc)
             return self.plan(tenant)
+        _PLANS.inc(path="robust", cache="hit" if hit else "miss")
         plan.details["cache_hit"] = hit
         tenant.plan = plan
         tenant.base_plan = plan.copy()

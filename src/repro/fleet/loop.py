@@ -26,6 +26,13 @@ from repro.fleet.admission import (AdmissionController, AdmissionError,
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
 from repro.fleet.plancache import PlanCache
 from repro.fleet.realloc import port_demand, reallocate, waterfill_grants
+from repro.obs import REGISTRY, FleetJournal, get_counter, get_gauge, span
+
+_EVENTS = get_counter("fleet_events_total",
+                      "fleet events handled, by kind and outcome")
+_GRANTS = get_counter("fleet_granted_ports_total",
+                      "surplus ports granted by the waterfill pass")
+_TENANTS = get_gauge("fleet_tenants", "currently admitted tenants")
 
 
 # ------------------------------------------------------------------- events
@@ -68,7 +75,8 @@ class FleetPlanner:
                  robust_replan: bool = False,
                  robust_objective: str = "max-regret",
                  robust_history: int = 3,
-                 seed: int = 0):
+                 seed: int = 0,
+                 journal: FleetJournal | None = None):
         self.fleet = fleet
         self.ledger = PortLedger(fleet.capacity())
         self.cache = cache if cache is not None else PlanCache()
@@ -97,6 +105,12 @@ class FleetPlanner:
         self.realloc_batches = 0        # batched JaxDES calls issued
         self.realloc_candidates = 0     # topologies evaluated inside them
         self.history: list[dict] = []
+        # structured decision log (JSONL-backed when given a path)
+        self.journal = journal if journal is not None else FleetJournal()
+        # planner-scoped metric view: report() reads DELTAS against this
+        # snapshot, so two planners in one process never pollute each
+        # other's compile-cache hit rate
+        self._obs_scope = REGISTRY.scope()
 
     # -------------------------------------------------------------- events
     def handle(self, event: FleetEvent) -> dict:
@@ -104,27 +118,38 @@ class FleetPlanner:
         # each tenant's cached within-entitlement plan) before mutating the
         # fleet, then let the end-of-event surplus pass redistribute from
         # scratch over the new tenant mix
-        self.revoke_grants()
-        try:
-            if isinstance(event, JobArrival):
-                record = self._on_arrival(event)
-            elif isinstance(event, JobDeparture):
-                record = self._on_departure(event)
-            elif isinstance(event, TrafficChange):
-                record = self._on_traffic_change(event)
-            else:
-                raise TypeError(f"unknown fleet event {event!r}")
-        except Exception:
-            # the event failed after grants were revoked: re-run the surplus
-            # pass so running tenants get their boosts back, then propagate
+        kind = {JobArrival: "arrival", JobDeparture: "departure",
+                TrafficChange: "traffic_change"}.get(type(event), "unknown")
+        with span("fleet.handle", kind=kind, tenant=event.name):
+            self.revoke_grants()
+            try:
+                if isinstance(event, JobArrival):
+                    record = self._on_arrival(event)
+                elif isinstance(event, JobDeparture):
+                    record = self._on_departure(event)
+                elif isinstance(event, TrafficChange):
+                    record = self._on_traffic_change(event)
+                else:
+                    raise TypeError(f"unknown fleet event {event!r}")
+            except Exception as exc:
+                # the event failed after grants were revoked: re-run the
+                # surplus pass so running tenants get their boosts back,
+                # then propagate
+                _EVENTS.inc(kind=kind, outcome="error")
+                self.journal.record("fleet_error", event_kind=kind,
+                                    tenant=event.name,
+                                    error=type(exc).__name__)
+                if self.auto_realloc:
+                    self.replan_surplus()
+                raise
             if self.auto_realloc:
-                self.replan_surplus()
-            raise
-        if self.auto_realloc:
-            record["realloc"] = self.replan_surplus()
-        self.ledger.check()
-        self.history.append(record)
-        return record
+                record["realloc"] = self.replan_surplus()
+            self.ledger.check()
+            self.history.append(record)
+            _EVENTS.inc(kind=kind, outcome="ok")
+            _TENANTS.set(len(self.tenants))
+            self.journal.record_event(event, record)
+            return record
 
     def process(self, events) -> list[dict]:
         return [self.handle(e) for e in events]
@@ -229,6 +254,12 @@ class FleetPlanner:
         needy = self.bottlenecked()
         if pool.sum() <= 0 or not needy:
             return []
+        with span("fleet.surplus_pass", needy=len(needy),
+                  pool=int(pool.sum())):
+            return self._surplus_pass(pool, needy)
+
+    def _surplus_pass(self, pool: np.ndarray,
+                      needy: list[Tenant]) -> list[dict]:
         demands = np.stack([
             scatter(port_demand(t.dag, t.plan.x, xbar=t.xbar()), t.pods,
                     self.fleet.num_pods) for t in needy])
@@ -238,6 +269,7 @@ class FleetPlanner:
             if g.sum() <= 0:
                 continue
             self.ledger.grant(tenant.name, g)
+            _GRANTS.inc(int(g.sum()))
             boosted = gather(self.ledger.limits(tenant.name), tenant.pods)
             res = reallocate(
                 tenant.dag, tenant.plan.x, boosted,
@@ -270,6 +302,7 @@ class FleetPlanner:
     # ------------------------------------------------------------- reports
     def report(self) -> dict:
         from repro.core.des_jax import des_cache_stats
+        sc = self._obs_scope
         return {
             "tenants": {
                 name: {"pods": list(t.pods), "nct": t.plan.nct,
@@ -281,10 +314,22 @@ class FleetPlanner:
             "ledger": self.ledger.snapshot(),
             "cache": self.cache.stats(),
             # jit churn accounting: misses are XLA recompiles; a healthy
-            # fleet loop is all hits after warm-up (process-wide counters)
-            "des_cache": des_cache_stats(),
+            # fleet loop is all hits after warm-up.  Hits/misses/evictions
+            # are DELTAS against the registry scope captured at planner
+            # construction, so a second planner in the same process does
+            # not pollute this planner's numbers; `entries` is the live
+            # process-wide cache size (a gauge, not attributable)
+            "des_cache": {
+                "hits": int(sc.delta("des_compile_hits_total")),
+                "misses": int(sc.delta("des_compile_miss_total")),
+                "evictions": int(sc.delta("des_compile_evictions_total")),
+                "entries": des_cache_stats()["entries"]},
+            "events": {k or "total": int(v) for k, v in
+                       sc.deltas("fleet_events_total").items() if v},
             "realloc": {"batches": self.realloc_batches,
-                        "candidates": self.realloc_candidates},
+                        "candidates": self.realloc_candidates,
+                        "granted_ports": int(
+                            sc.delta("fleet_granted_ports_total"))},
         }
 
 

@@ -1,0 +1,149 @@
+"""Structured, replayable event journal for the fleet control plane.
+
+Every `FleetPlanner.handle()` call appends one entry: the incoming event
+(serialized well enough to reconstruct it), the decision record the planner
+produced, and a monotonically increasing sequence number.  The journal is
+
+  * **structured**: entries are plain dicts, JSONL on disk (one entry per
+    line, append-only -- the persisted-plan-state shape an online planner
+    restarts from);
+  * **replayable**: `load()` reads entries back and `rebuild_events()`
+    turns them into live `FleetEvent` objects (JobSpec round-trips through
+    its dataclass fields), so a journal can re-drive a fresh planner;
+  * cheap: in-memory by default, file-backed when given a path.
+
+This is deliberately NOT a metrics stream (see `repro.obs.metrics`): the
+journal answers "what did the planner decide, in order, and why", metrics
+answer "how much / how fast".
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import threading
+
+__all__ = ["FleetJournal", "serialize_event", "rebuild_event"]
+
+
+def _jobspec_to_dict(job) -> dict:
+    return dataclasses.asdict(job)
+
+
+def _jobspec_from_dict(data: dict):
+    from repro.core.traffic import JobSpec
+    kw = dict(data)
+    for f in dataclasses.fields(JobSpec):
+        # JSON round-trips tuples as lists; restore tuple-typed fields
+        if f.name in kw and isinstance(kw[f.name], list):
+            kw[f.name] = tuple(kw[f.name])
+    return JobSpec(**kw)
+
+
+def serialize_event(event) -> dict:
+    """FleetEvent -> JSON-safe dict (kind + reconstruction fields)."""
+    from repro.fleet.loop import JobArrival, JobDeparture, TrafficChange
+    if isinstance(event, JobArrival):
+        return {"kind": "arrival", "name": event.name,
+                "job": _jobspec_to_dict(event.job),
+                "reverse_stages": event.reverse_stages,
+                "port_min": event.port_min,
+                "donate_surplus": event.donate_surplus,
+                "base_pod": event.base_pod}
+    if isinstance(event, JobDeparture):
+        return {"kind": "departure", "name": event.name}
+    if isinstance(event, TrafficChange):
+        return {"kind": "traffic_change", "name": event.name,
+                "job": _jobspec_to_dict(event.job)}
+    raise TypeError(f"unknown fleet event {event!r}")
+
+
+def rebuild_event(data: dict):
+    """Inverse of `serialize_event`."""
+    from repro.fleet.loop import JobArrival, JobDeparture, TrafficChange
+    kind = data.get("kind")
+    if kind == "arrival":
+        return JobArrival(
+            name=data["name"], job=_jobspec_from_dict(data["job"]),
+            reverse_stages=bool(data.get("reverse_stages", False)),
+            port_min=bool(data.get("port_min", False)),
+            donate_surplus=data.get("donate_surplus"),
+            base_pod=data.get("base_pod"))
+    if kind == "departure":
+        return JobDeparture(name=data["name"])
+    if kind == "traffic_change":
+        return TrafficChange(name=data["name"],
+                             job=_jobspec_from_dict(data["job"]))
+    raise ValueError(f"unknown journal event kind {kind!r}")
+
+
+class FleetJournal:
+    """Append-only planner journal; JSONL-backed when given a path."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = os.fspath(path) if path is not None else None
+        self.entries: list[dict] = []
+        self._lock = threading.Lock()
+        self._fh: io.TextIOBase | None = None
+        if self.path is not None:
+            self._fh = open(self.path, "a")
+
+    # ------------------------------------------------------------ recording
+    def record(self, kind: str, **fields) -> dict:
+        """Append one structured entry; returns it (with seq stamped)."""
+        with self._lock:
+            entry = {"seq": len(self.entries), "kind": kind, **fields}
+            self.entries.append(entry)
+            if self._fh is not None:
+                json.dump(entry, self._fh, default=_json_default)
+                self._fh.write("\n")
+                self._fh.flush()
+        return entry
+
+    def record_event(self, event, record: dict) -> dict:
+        """The planner's per-`handle()` entry: event + decision record."""
+        return self.record("fleet_event", event=serialize_event(event),
+                           record=record)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -------------------------------------------------------------- replay
+    @staticmethod
+    def load(path: str | os.PathLike) -> list[dict]:
+        """Read a JSONL journal back into entry dicts."""
+        out = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(json.loads(line))
+        return out
+
+    @classmethod
+    def rebuild_events(cls, entries) -> list:
+        """Journal entries (or a path) -> ordered live FleetEvents, ready
+        to re-drive a fresh `FleetPlanner.process()`."""
+        if isinstance(entries, (str, os.PathLike)):
+            entries = cls.load(entries)
+        return [rebuild_event(e["event"]) for e in entries
+                if e.get("kind") == "fleet_event"]
+
+
+def _json_default(obj):
+    """Decision records carry numpy scalars / arrays; keep JSONL valid."""
+    import numpy as np
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return str(obj)

@@ -1,0 +1,297 @@
+"""repro.obs: metrics exposition, span semantics, timeline schema,
+journal replay, and the planner-scoped report deltas."""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.des import DESProblem, simulate
+from repro.obs import (FleetJournal, MetricsRegistry, Tracer,
+                       rebuild_event, schedule_timeline, serialize_event,
+                       slack_report, task_slack, validate_trace,
+                       write_trace)
+from repro.obs.tracing import _NULL_SPAN
+from conftest import gpt7b_job, one_circuit_topology
+
+
+# ------------------------------------------------------------------ metrics
+class TestMetrics:
+    def test_counter_gauge_histogram_roundtrip(self):
+        reg = MetricsRegistry(enabled=True)
+        c = reg.counter("requests_total", "requests served")
+        c.inc()
+        c.inc(2, method="get")
+        g = reg.gauge("pool_ports", "free ports")
+        g.set(7)
+        g.dec(3)
+        h = reg.histogram("latency_seconds", "op latency",
+                          buckets=(0.1, 1.0))
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(5.0)
+        assert c.value() == 1 and c.value(method="get") == 2
+        assert g.value() == 4
+        assert h.value() == 3 and h.sum() == pytest.approx(5.55)
+
+    def test_counter_rejects_negative(self):
+        reg = MetricsRegistry(enabled=True)
+        with pytest.raises(ValueError):
+            reg.counter("c").inc(-1)
+
+    def test_type_conflict_raises(self):
+        reg = MetricsRegistry(enabled=True)
+        reg.counter("x_total")
+        with pytest.raises(TypeError):
+            reg.gauge("x_total")
+
+    def test_prometheus_exposition_golden(self):
+        """Exact text exposition: # HELP / # TYPE + one line per series,
+        labels sorted, histograms with cumulative le buckets."""
+        reg = MetricsRegistry(enabled=True)
+        c = reg.counter("events_total", "events handled")
+        c.inc(3, kind="arrival")
+        c.inc(1, kind="departure")
+        g = reg.gauge("tenants", "admitted tenants")
+        g.set(2)
+        h = reg.histogram("solve_seconds", "solver wall clock",
+                          buckets=(1.0, 10.0))
+        h.observe(0.5)
+        h.observe(4.0)
+        assert reg.render_prometheus() == (
+            "# HELP events_total events handled\n"
+            "# TYPE events_total counter\n"
+            'events_total{kind="arrival"} 3\n'
+            'events_total{kind="departure"} 1\n'
+            "# HELP solve_seconds solver wall clock\n"
+            "# TYPE solve_seconds histogram\n"
+            'solve_seconds_bucket{le="1"} 1\n'
+            'solve_seconds_bucket{le="10"} 2\n'
+            'solve_seconds_bucket{le="+Inf"} 2\n'
+            "solve_seconds_sum 4.5\n"
+            "solve_seconds_count 2\n"
+            "# HELP tenants admitted tenants\n"
+            "# TYPE tenants gauge\n"
+            "tenants 2\n")
+
+    def test_snapshot_is_json_and_scoped_deltas(self):
+        reg = MetricsRegistry(enabled=True)
+        c = reg.counter("hits_total")
+        c.inc(5)
+        scope = reg.scope()
+        c.inc(2)
+        c.inc(4, shard="a")
+        assert scope.delta("hits_total") == 2
+        assert scope.delta("hits_total", shard="a") == 4
+        assert scope.delta("missing_total") == 0
+        snap = json.loads(reg.to_json())
+        assert snap["hits_total"]["series"][""] == 7
+        assert snap["hits_total"]["series"]["shard=a"] == 4
+
+    def test_disabled_registry_is_inert(self):
+        reg = MetricsRegistry(enabled=False)
+        c = reg.counter("c_total")
+        c.inc(100)
+        assert c.value() == 0
+        assert reg.snapshot()["c_total"]["series"] == {}
+
+
+# ------------------------------------------------------------------ tracing
+class TestTracing:
+    def test_nesting_and_parents(self):
+        tr = Tracer(enabled=True)
+        with tr.span("outer"):
+            with tr.span("inner", k=1):
+                pass
+            with tr.span("inner2"):
+                pass
+        recs = {r.name: r for r in tr.records}
+        assert recs["inner"].parent == "outer" and recs["inner"].depth == 1
+        assert recs["inner2"].parent == "outer"
+        assert recs["outer"].parent is None and recs["outer"].depth == 0
+        assert recs["inner"].attrs == {"k": 1}
+        assert all(r.dur >= 0 for r in tr.records)
+
+    def test_exception_safety(self):
+        tr = Tracer(enabled=True)
+        with pytest.raises(RuntimeError):
+            with tr.span("outer"):
+                with tr.span("boom"):
+                    raise RuntimeError("x")
+        recs = {r.name: r for r in tr.records}
+        assert recs["boom"].attrs["error"] == "RuntimeError"
+        assert recs["outer"].attrs["error"] == "RuntimeError"
+        # the stack unwound fully: a new span is a root again
+        with tr.span("after"):
+            pass
+        assert {r.name: r for r in tr.records}["after"].parent is None
+
+    def test_disabled_mode_is_nullspan_and_cheap(self):
+        """Disabled spans must stay WELL under the 2% overhead budget of
+        the delta-fast smoke: the ga hot loop takes >=100us per
+        generation, so <2us per disabled span() call is a 50x margin --
+        and immune to CI wall-clock noise, unlike an end-to-end A/B."""
+        tr = Tracer(enabled=False)
+        assert tr.span("x", a=1) is _NULL_SPAN
+        n = 100_000
+        t0 = time.perf_counter()
+        for _ in range(n):
+            with tr.span("hot", i=0):
+                pass
+        per_call = (time.perf_counter() - t0) / n
+        assert per_call < 2e-6, f"{per_call * 1e6:.2f}us per disabled span"
+        assert tr.records == []
+
+    def test_summary_and_chrome_trace(self):
+        tr = Tracer(enabled=True)
+        for _ in range(3):
+            with tr.span("work"):
+                pass
+        s = tr.summary()["work"]
+        assert s["count"] == 3 and s["total_s"] >= 0
+        assert s["max_s"] <= s["total_s"] + 1e-12
+        trace = tr.to_chrome_trace()
+        assert validate_trace(trace) == []
+
+    def test_enabled_context_manager_restores(self):
+        tr = Tracer(enabled=False)
+        with tr.enabled(True):
+            with tr.span("x"):
+                pass
+        assert not tr.is_enabled
+        assert len(tr.records) == 1
+
+    def test_max_records_drop(self):
+        tr = Tracer(enabled=True, max_records=2)
+        for _ in range(5):
+            with tr.span("x"):
+                pass
+        assert len(tr.records) == 2 and tr.dropped == 3
+
+
+# ----------------------------------------------------------------- timeline
+class TestTimeline:
+    def test_slack_report_matches_des_makespan(self, small_dag):
+        x = one_circuit_topology(small_dag)
+        res = simulate(DESProblem(small_dag), x, record_rates=True)
+        slack = task_slack(small_dag, res)
+        rep = slack_report(small_dag, res)
+        assert rep["feasible"]
+        assert rep["makespan"] == pytest.approx(res.makespan)
+        # realized finishes agree with the reported makespan
+        finite = np.isfinite(res.finish)
+        assert res.finish[finite].max() == pytest.approx(rep["makespan"])
+        # the DES-certified critical path has (numerically) zero slack
+        rel = 1e-6 * res.makespan
+        for tid in rep["critical_path"]:
+            assert slack[tid] <= rel
+        assert rep["zero_slack_tasks"], "some task must be critical"
+        # non-critical tasks: slack == how far the finish can slip; all
+        # slacks are non-negative on a feasible realized schedule
+        assert (slack[finite] >= -rel).all()
+
+    def test_schedule_timeline_schema_and_tracks(self, small_dag):
+        x = one_circuit_topology(small_dag)
+        trace = schedule_timeline(small_dag, x)
+        assert validate_trace(trace) == []
+        events = trace["traceEvents"]
+        pairs = DESProblem(small_dag).pairs
+        names = {e["args"]["name"] for e in events
+                 if e["ph"] == "M" and e["name"] == "thread_name"}
+        assert len(names) == len(pairs)
+        tasks = [e for e in events if e["ph"] == "X"]
+        assert len(tasks) == sum(1 for _ in small_dag.real_tasks())
+        # per-link utilization counters from the rate trace, within [0, 1+]
+        counters = [e for e in events if e["ph"] == "C"]
+        assert counters
+        assert all(e["args"]["utilization"] >= 0 for e in counters)
+        assert trace["otherData"]["makespan_s"] > 0
+        # round-trips through JSON
+        assert validate_trace(json.loads(json.dumps(trace))) == []
+
+    def test_write_trace_rejects_invalid(self, tmp_path):
+        with pytest.raises(ValueError):
+            write_trace({"traceEvents": [{"ph": "Z"}]},
+                        str(tmp_path / "bad.json"))
+
+    def test_infeasible_plan_raises(self, small_dag):
+        P = small_dag.cluster.num_pods
+        with pytest.raises(ValueError):
+            schedule_timeline(small_dag, np.zeros((P, P), dtype=np.int64))
+
+
+# ------------------------------------------------------------------ journal
+class TestJournal:
+    def test_event_serialization_roundtrip(self):
+        from repro.fleet.loop import (JobArrival, JobDeparture,
+                                      TrafficChange)
+        job = gpt7b_job(4)
+        for ev in (JobArrival("a", job, port_min=True, base_pod=1),
+                   JobDeparture("a"),
+                   TrafficChange("a", gpt7b_job(8))):
+            data = json.loads(json.dumps(serialize_event(ev)))
+            assert rebuild_event(data) == ev
+
+    def test_jsonl_roundtrip_and_replay(self, tmp_path):
+        from repro.fleet.loop import JobArrival, JobDeparture
+        path = tmp_path / "journal.jsonl"
+        j = FleetJournal(path)
+        events = [JobArrival("m", gpt7b_job(4)), JobDeparture("m")]
+        for i, ev in enumerate(events):
+            j.record_event(ev, {"i": i, "np": np.int64(3)})
+        j.record("note", msg="not an event")
+        j.close()
+        entries = FleetJournal.load(path)
+        assert [e["seq"] for e in entries] == [0, 1, 2]
+        assert entries[0]["record"]["np"] == 3    # numpy scalars serialized
+        assert FleetJournal.rebuild_events(entries) == events
+        assert FleetJournal.rebuild_events(path) == events
+
+
+# ------------------------------------------------------- fleet integration
+@pytest.mark.slow
+class TestFleetObs:
+    def _mini_fleet(self):
+        from repro.core.ga import GAOptions
+        from repro.fleet import FleetSpec
+        job = gpt7b_job(2)
+        ent = max(job.placement().port_limits())
+        fleet = FleetSpec(num_pods=4, ports_per_pod=2 * ent, nic_gbps=100.0)
+        ga = GAOptions(seed=0, pop_size=12, max_generations=5, patience=3,
+                       time_limit=10.0)
+        return fleet, ga, job
+
+    def test_report_scoped_and_journal_replay(self, tmp_path):
+        from repro.fleet import FleetPlanner, JobArrival, JobDeparture
+        fleet, ga, job = self._mini_fleet()
+        path = tmp_path / "fleet.jsonl"
+        p1 = FleetPlanner(fleet, ga_options=ga, seed=0,
+                          journal=FleetJournal(path))
+        p1.handle(JobArrival("m", job))
+        r1 = p1.report()
+        assert r1["des_cache"]["misses"] >= 1     # first plan jit-compiles
+
+        # a SECOND planner in the same process: its scope starts at the
+        # current counters, so the first planner's compile misses must
+        # not leak into its report (the satellite bug this PR fixes)
+        p2 = FleetPlanner(fleet, ga_options=ga, seed=0)
+        r2 = p2.report()
+        assert r2["des_cache"]["misses"] == 0
+        assert r2["des_cache"]["hits"] == 0
+        assert r2["events"] == {}
+
+        p1.handle(JobDeparture("m"))
+        r1b = p1.report()
+        assert r1b["events"]["kind=arrival,outcome=ok"] == 1
+        assert r1b["events"]["kind=departure,outcome=ok"] == 1
+
+        # journal replay re-drives a fresh planner to the same decisions
+        replayed = FleetJournal.rebuild_events(path)
+        assert [type(e).__name__ for e in replayed] == \
+            ["JobArrival", "JobDeparture"]
+        p3 = FleetPlanner(fleet, ga_options=ga, seed=0)
+        records = p3.process(replayed)
+        assert records[0]["ports"] == p1.history[0]["ports"]
+        assert records[0]["nct"] == pytest.approx(p1.history[0]["nct"])
