@@ -1,0 +1,195 @@
+"""DELTA-Failsafe chaos suite: fault-injected fleet robustness metrics.
+
+Three measurements, all seeded and generation-bounded so the emitted
+quality metrics are deterministic and gate-able by
+benchmarks/check_regression.py:
+
+  * scripted fabric faults on a two-tenant fleet -- per-event repair
+    latency plus the chosen option and the masked-makespan inflation the
+    repair accepted (``chaos/repair/<event>``);
+  * a pool of seeded `FaultInjector` traces driven through fresh planners
+    -- ledger conservation is checked after every event and the row
+    records the violation count, which must stay at zero
+    (``chaos/traces``);
+  * journal-based crash recovery -- snapshot + tail replay wall clock and
+    whether the recovered planner's decision history is bit-identical
+    (``chaos/recovery``);
+  * the solver fallback chain under a zero MILP budget -- the stage that
+    produced the plan and its makespan (``chaos/fallback``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, save_json
+from repro.core.ga import GAOptions
+from repro.core.milp import solve_resilient
+from repro.core.schedule import build_comm_dag
+from repro.core.traffic import JobSpec
+from repro.fleet import (FaultInjector, FleetPlanner, FleetSpec, JobArrival,
+                         LinkFailure, LinkRecovery, PlaneFailure,
+                         PlaneRecovery, PlanCache, fault_events_from_trace)
+from repro.obs import FleetJournal
+
+
+def _ga_opts(full: bool, smoke: bool) -> GAOptions:
+    gens = 40 if full else (10 if smoke else 20)
+    return GAOptions(seed=0, pop_size=32 if full else 16,
+                     max_generations=gens, patience=10**9, time_limit=1e9)
+
+
+def _job(name: str, pp: int = 4, mb: int = 4) -> JobSpec:
+    return JobSpec(name=name, tp=2, pp=pp, dp=2, num_microbatches=mb,
+                   micro_tokens=4096, d_model=4096,
+                   stage_params=(1.75e9,) * pp, gpus_per_pod_per_replica=4)
+
+
+def _planner(opts: GAOptions, cache: PlanCache, seed: int = 0,
+             **kw) -> FleetPlanner:
+    fleet = FleetSpec(num_pods=6, ports_per_pod=16, nic_gbps=100.0)
+    return FleetPlanner(fleet, ga_options=opts, cache=cache, seed=seed, **kw)
+
+
+def _admit(pl: FleetPlanner) -> None:
+    pl.handle(JobArrival(name="a", job=_job("ja")))
+    pl.handle(JobArrival(name="b", job=_job("jb", pp=2), port_min=True))
+
+
+def _repair_rows(opts: GAOptions, cache: PlanCache) -> list[Row]:
+    """Scripted faults; each row is one `handle()` call on a live fleet."""
+    pl = _planner(opts, cache)
+    _admit(pl)
+    ms_healthy = pl.tenants["a"].plan.makespan
+    events = [
+        ("link50", LinkFailure(pair=(0, 1), fraction=0.5)),
+        ("plane_down", PlaneFailure(plane=0)),
+        ("recovery", LinkRecovery(pair=(0, 1))),
+        ("all_clear", PlaneRecovery(plane=0)),
+    ]
+    rows: list[Row] = []
+    for label, ev in events:
+        t0 = time.time()
+        record = pl.handle(ev)
+        dt = time.time() - t0
+        repairs = record.get("repairs", [])
+        dec = next((r for r in repairs if r["tenant"] == "a"), None)
+        ms = dec["makespan"] if dec else pl.tenants["a"].plan.makespan
+        infl = ms / ms_healthy if np.isfinite(ms) and ms_healthy > 0 else 0.0
+        rows.append(Row(
+            f"chaos/repair/{label}", dt * 1e6,
+            f"option={dec['option'] if dec else 'none'};"
+            f"makespan={ms:.6f};inflation={infl:.4f};"
+            f"repairs={len(repairs)}"))
+    pl.ledger.check()
+    return rows
+
+
+def _trace_rows(opts: GAOptions, cache: PlanCache, full: bool,
+                smoke: bool) -> list[Row]:
+    """Seeded fault traces through fresh planners; the ledger must balance
+    after every event and no event may raise."""
+    num_traces = 40 if full else 20
+    trace_len = 8 if full else (5 if smoke else 8)
+    violations = 0
+    events = repairs = replans = 0
+    t0 = time.time()
+    for seed in range(num_traces):
+        pl = _planner(opts, cache, seed=seed)
+        _admit(pl)
+        inj = FaultInjector(num_pods=pl.fleet.num_pods, seed=seed,
+                            max_fraction=0.9)
+        for ev in fault_events_from_trace(inj.trace(trace_len)):
+            try:
+                record = pl.handle(ev)   # runs ledger.check() internally
+            except Exception:            # noqa: BLE001
+                violations += 1
+                continue
+            events += 1
+            repairs += len(record.get("repairs", []))
+            replans += len(record.get("replans", []))
+        for name in pl.tenants:
+            acct = pl.ledger.account(name)
+            if (acct.allocated > acct.limits).any():
+                violations += 1
+    dt = time.time() - t0
+    return [Row(
+        "chaos/traces", dt * 1e6,
+        f"traces={num_traces};events={events};violations={violations};"
+        f"repairs={repairs};replans={replans}")]
+
+
+def _recovery_rows(opts: GAOptions, cache: PlanCache) -> list[Row]:
+    """Crash-recovery drill: snapshot + journal-tail replay must land on a
+    bit-identical decision history."""
+    import tempfile
+    events = [
+        LinkFailure(pair=(0, 1), fraction=0.5),
+        PlaneFailure(plane=0),
+        LinkRecovery(pair=(0, 1)),
+        PlaneRecovery(plane=0),
+    ]
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "journal.jsonl")
+        pl = _planner(opts, cache, snapshot_every=3,
+                      journal=FleetJournal(path))
+        _admit(pl)
+        for ev in events:
+            pl.handle(ev)
+        pl.journal.close()
+        t0 = time.time()
+        pl2 = FleetPlanner.recover(path, pl.fleet, ga_options=opts,
+                                   cache=PlanCache(), snapshot_every=3)
+        dt = time.time() - t0
+        same = json.dumps(pl.history, default=str) == \
+            json.dumps(pl2.history, default=str)
+    return [Row(
+        "chaos/recovery", dt * 1e6,
+        f"identical={int(same)};events={len(events) + 2};"
+        f"snapshots={pl._events_handled // 3}")]
+
+
+def _fallback_rows(opts: GAOptions) -> list[Row]:
+    """Solver fallback chain with a zero MILP budget: the chain must skip
+    straight past the MILP and still return a validate-clean plan."""
+    dag = build_comm_dag(_job("fb", pp=2, mb=2))
+    t0 = time.time()
+    res = solve_resilient(dag, budget_s=0.0, ga_options=opts)
+    dt = time.time() - t0
+    stage = getattr(res, "fallback_stage", None) or "milp"
+    return [Row(
+        "chaos/fallback", dt * 1e6,
+        f"stage={stage};degraded={int(bool(getattr(res, 'degraded', 0)))};"
+        f"makespan={res.makespan:.6f};feasible={int(res.feasible)}")]
+
+
+def run(full: bool = False) -> list[Row]:
+    from repro.core.des_jax import des_cache_stats
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    opts = _ga_opts(full, smoke)
+    # one shared plan cache: arrivals repeat across traces, so after the
+    # first planner the admission path is cache-hits and the suite
+    # measures fault handling, not GA planning
+    cache = PlanCache()
+    rows: list[Row] = []
+    t_suite = time.time()
+    cache0 = des_cache_stats()
+    rows += _repair_rows(opts, cache)
+    rows += _trace_rows(opts, cache, full, smoke)
+    rows += _recovery_rows(opts, cache)
+    rows += _fallback_rows(opts)
+    cache1 = des_cache_stats()
+    wall = time.time() - t_suite
+    compiles = cache1["misses"] - cache0["misses"]
+    rows.append(Row(
+        "chaos/suite_wall", wall * 1e6,
+        f"seconds={wall:.2f};des_compiles={compiles};"
+        f"des_cache_reuses={cache1['hits'] - cache0['hits']}"))
+    save_json("chaos_bench", {
+        "rows": [{"name": r.name, "us_per_call": r.us_per_call,
+                  "derived": r.derived} for r in rows],
+        "seconds": wall, "des_compiles": compiles})
+    return rows

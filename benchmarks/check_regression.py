@@ -33,7 +33,9 @@ import json
 import os
 import sys
 
-METRIC_KEYS = ("makespan", "worst_regret")
+# violations gates the chaos suite's ledger-conservation count: with a
+# committed baseline of 0, any fresh violation fails (0 * (1+tol) < 1)
+METRIC_KEYS = ("makespan", "worst_regret", "violations")
 DEFAULT_METRIC_TOL = 0.20      # >20% quality regression fails
 DEFAULT_WALL_RATIO = 2.0       # >2x wall-clock regression fails
 DEFAULT_WALL_FLOOR_US = 10_000.0   # ignore wall noise on sub-10ms rows
@@ -50,6 +52,7 @@ SUITE_TOL: dict[str, dict[str, float]] = {
     "des": {"wall": 4.0},
     "ga": {"wall": 4.0},
     "robust": {"wall": 4.0},
+    "chaos": {"wall": 4.0},
 }
 
 # rows that MUST exist in both the committed baseline and the fresh run:
@@ -58,6 +61,9 @@ SUITE_TOL: dict[str, dict[str, float]] = {
 # (e.g. a refactor silently dropping it) must fail the gate, not skip it
 REQUIRED_ROWS: dict[str, tuple[str, ...]] = {
     "robust": ("robust/suite_wall",),
+    # chaos/traces pins the zero-ledger-violation invariant: losing the
+    # row (or the suite) must fail the gate, not silently skip it
+    "chaos": ("chaos/suite_wall", "chaos/traces"),
 }
 
 

@@ -29,10 +29,10 @@ import numpy as np
 from repro.core.baselines import BASELINES
 from repro.core.dag import VIRTUAL, CommDAG, DagEnsemble
 from repro.core.des import DESProblem, DESResult, simulate
-from repro.core.ga import (GAOptions, GAResult, delta_fast, delta_robust,
-                           ROBUST_OBJECTIVES)
+from repro.core.ga import (GAOptions, GAResult, delta_failsafe, delta_fast,
+                           delta_robust, ROBUST_OBJECTIVES)
 from repro.core.milp import (MILPOptions, MILPResult, solve_delta_milp,
-                             solve_robust_milp)
+                             solve_resilient, solve_robust_milp)
 
 # DES engine knobs + jit-churn accounting, re-exported so callers tuning
 # the evaluation engine (kernel backend, compile buckets) need only the
@@ -308,6 +308,61 @@ def optimize_ensemble(ensemble: DagEnsemble, method: str = "delta-robust",
         weights=np.asarray(ensemble.weights), makespans=makespans,
         refs=refs, regrets=regrets, elapsed=time.time() - t0,
         feasible=feasible, details=details)
+
+
+def optimize_failsafe(dag: CommDAG,
+                      scenarios: list[np.ndarray] | None = None,
+                      num_planes: int = 4, k: int = 1,
+                      objective: str = "worst",
+                      ga_options: GAOptions | None = None,
+                      ideal_result: DESResult | None = None) -> PlanResult:
+    """DELTA-Failsafe entry point: one topology whose makespan holds up
+    across fabric-degradation scenarios (capacity masks; default: every
+    k-of-num_planes plane loss per pod pair).  Reported under healthy
+    fair-share DES semantics; per-scenario exact makespans ride in
+    `details`."""
+    problem = DESProblem(dag)
+    ideal = ideal_result or _ideal(problem)
+    t0 = time.time()
+    res = delta_failsafe(dag, ga_options, scenarios=scenarios,
+                         num_planes=num_planes, k=k, objective=objective)
+    elapsed = time.time() - t0
+    out = _from_des(dag, problem, "delta-failsafe", res.x, elapsed, ideal)
+    out.feasible = out.feasible and res.feasible
+    out.details.update(objective=objective,
+                       scenario_makespans=res.makespans.tolist(),
+                       worst_scenario_makespan=float(res.makespans.max()),
+                       generations=res.generations,
+                       evaluations=res.evaluations)
+    return out
+
+
+def optimize_resilient(dag: CommDAG, *, budget_s: float | None = None,
+                       retries: int = 1,
+                       ga_options: GAOptions | None = None,
+                       milp_options: MILPOptions | None = None,
+                       current_x: np.ndarray | None = None,
+                       mask: np.ndarray | None = None,
+                       ideal_result: DESResult | None = None) -> PlanResult:
+    """Budgeted MILP solve with the full fallback chain (MILP -> GA ->
+    masked current plan): always returns a plan, with `degraded` and the
+    producing `fallback_stage` in `details` when the MILP did not make
+    the budget."""
+    problem = DESProblem(dag)
+    ideal = ideal_result or _ideal(problem)
+    t0 = time.time()
+    mres = solve_resilient(dag, milp_options, budget_s=budget_s,
+                           retries=retries, ga_options=ga_options,
+                           current_x=current_x, mask=mask)
+    elapsed = time.time() - t0
+    out = _from_des(dag, problem, "delta-resilient", mres.x, elapsed, ideal)
+    out.feasible = out.feasible and mres.feasible
+    out.details.update(milp_status=mres.status,
+                       milp_makespan=mres.makespan,
+                       degraded=bool(getattr(mres, "degraded", False)),
+                       fallback_stage=getattr(mres, "fallback_stage", None),
+                       stats=mres.stats)
+    return out
 
 
 def fleet_optimize(requests, num_pods: int | None = None,

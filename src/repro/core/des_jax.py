@@ -323,7 +323,7 @@ class _StaticCfg(NamedTuple):
 
 
 def _simulate(arr: DESArrays, x: jax.Array, ideal_flag: jax.Array,
-              max_events: int, backend: str = "segment",
+              mask: jax.Array, max_events: int, backend: str = "segment",
               interpret: bool = False) -> tuple[jax.Array, jax.Array,
                                                 jax.Array, jax.Array]:
     """Returns (makespan, feasible, start, finish).
@@ -335,12 +335,19 @@ def _simulate(arr: DESArrays, x: jax.Array, ideal_flag: jax.Array,
     time has arrived.  Each trip therefore retires at least one start or
     completion, bounding the trip count by the number of distinct event
     times (`default_max_events`), independent of how many tasks share one.
+
+    ``mask`` is the (P, P) per-link availability factor (1 = healthy,
+    0 = dark, fractional = partially failed plane set).  It multiplies the
+    link capacities only -- NIC caps are pod-local and unaffected -- and is
+    a *traced* operand, so pricing a failure never leaves the compile
+    bucket the healthy plan was jitted into.
     """
     n = arr.n
     B = arr.nic_bandwidth
     # cap dtype follows the simulation dtype: hard-coding float64 is a
     # silent no-op downcast to float32 under default x64-disabled jax
     link_caps = x[arr.link_pair_a, arr.link_pair_b].astype(
+        arr.volume.dtype) * mask[arr.link_pair_a, arr.link_pair_b].astype(
         arr.volume.dtype) * B
     link_caps = jnp.where(ideal_flag, INF, link_caps)
     caps = jnp.concatenate(
@@ -453,10 +460,10 @@ class CompiledDES:
                          num_link_cons=cfg.num_link_cons,
                          nic_bandwidth=1.0, n=cfg.n)
 
-    def _run(self, leaves, x, ideal):
+    def _run(self, leaves, x, ideal, mask):
         cfg = self.cfg
-        return _simulate(self._rebuild(leaves), x, ideal, cfg.max_events,
-                         cfg.backend, cfg.interpret)
+        return _simulate(self._rebuild(leaves), x, ideal, mask,
+                         cfg.max_events, cfg.backend, cfg.interpret)
 
     def _scatter(self, g, eu, ev):
         P = self.cfg.P
@@ -487,32 +494,38 @@ class CompiledDES:
 
     @functools.cached_property
     def batch_x(self):
-        def f(leaves, xs):
+        def f(leaves, xs, mask):
             return jax.vmap(
-                lambda x: self._run(leaves, x, jnp.asarray(False))[:2])(xs)
+                lambda x: self._run(leaves, x, jnp.asarray(False),
+                                    mask)[:2])(xs)
         return self._traced("batch_x", jax.jit(f))
 
     @functools.cached_property
     def batch_genomes(self):
-        def f(leaves, genomes, eu, ev):
+        def f(leaves, genomes, eu, ev, mask):
             def one(g):
                 return self._run(leaves, self._scatter(g, eu, ev),
-                                 jnp.asarray(False))[:2]
+                                 jnp.asarray(False), mask)[:2]
             return jax.vmap(one)(genomes)
         return self._traced("batch_genomes", jax.jit(f))
 
     @functools.cached_property
     def ensemble_genomes(self):
-        def one_member(leaves, x):
-            return self._run(leaves, x, jnp.asarray(False))[:2]
+        # masks carries a leading member axis (M, P, P): the robust path
+        # passes jnp.ones, the k-failure objective one failure scenario
+        # per stacked member -- same compiled executable either way
+        def one_member(leaves, x, mask):
+            return self._run(leaves, x, jnp.asarray(False), mask)[:2]
 
-        def one_genome(leaves, g, eu, ev):
+        def one_genome(leaves, g, eu, ev, masks):
             x = self._scatter(g, eu, ev)
-            return jax.vmap(one_member, in_axes=(0, None))(leaves, x)
+            return jax.vmap(one_member, in_axes=(0, None, 0))(leaves, x,
+                                                              masks)
 
         return self._traced(
             "ensemble_genomes",
-            jax.jit(jax.vmap(one_genome, in_axes=(None, 0, None, None))))
+            jax.jit(jax.vmap(one_genome,
+                             in_axes=(None, 0, None, None, None))))
 
 
 _COMPILE_CACHE: OrderedDict[tuple, CompiledDES] = OrderedDict()
@@ -590,30 +603,42 @@ class JaxDES:
                          interpret=ropt.interpret, members=0)
         self._compiled = _compiled_for(cfg, pad, ropt.warn_on_miss)
         self._leaves = tuple(getattr(self.arrays, f) for f in _ARRAY_FIELDS)
+        self.P = problem.dag.cluster.num_pods
 
-    def makespan(self, x, ideal: bool = False) -> float:
+    def _mask(self, mask) -> jax.Array:
+        """(P, P) link-availability factor; None means a healthy fabric.
+        Always materialized (ones when healthy) so degraded calls hit the
+        exact same traced signature -- no re-jit on the first failure."""
+        if mask is None:
+            return jnp.ones((self.P, self.P))
+        return jnp.asarray(mask, dtype=jnp.float32)
+
+    def makespan(self, x, ideal: bool = False, mask=None) -> float:
         with span("des.simulate", entry="single", n=self.pad.n):
             ms, _, _, _ = self._compiled.single(
-                self._leaves, jnp.asarray(x), jnp.asarray(ideal))
+                self._leaves, jnp.asarray(x), jnp.asarray(ideal),
+                self._mask(mask))
             return float(ms)
 
-    def simulate(self, x, ideal: bool = False):
+    def simulate(self, x, ideal: bool = False, mask=None):
         with span("des.simulate", entry="single", n=self.pad.n):
             ms, feas, start, finish = self._compiled.single(
-                self._leaves, jnp.asarray(x), jnp.asarray(ideal))
+                self._leaves, jnp.asarray(x), jnp.asarray(ideal),
+                self._mask(mask))
             n = self.problem.n    # strip bucket-padding ghost tasks
             return (float(ms), bool(feas), np.asarray(start)[:n],
                     np.asarray(finish)[:n])
 
-    def batch_makespan(self, xs) -> tuple[np.ndarray, np.ndarray]:
+    def batch_makespan(self, xs, mask=None) -> tuple[np.ndarray, np.ndarray]:
         """Makespans + feasibility for a (pop, P, P) batch of topologies."""
         xs = jnp.asarray(xs)
         with span("des.simulate", entry="batch_x", n=self.pad.n,
                   pop=int(xs.shape[0])):
-            ms, feas = self._compiled.batch_x(self._leaves, xs)
+            ms, feas = self._compiled.batch_x(self._leaves, xs,
+                                              self._mask(mask))
             return np.asarray(ms), np.asarray(feas)
 
-    def batch_genome_makespan(self, genomes, edge_u, edge_v
+    def batch_genome_makespan(self, genomes, edge_u, edge_v, mask=None
                               ) -> tuple[np.ndarray, np.ndarray]:
         """Fused GA generation-step fitness: scatter a (pop, E) genome batch
         onto (pop, P, P) topologies *on device* and simulate, all in one
@@ -625,7 +650,7 @@ class JaxDES:
             ms, feas = self._compiled.batch_genomes(
                 self._leaves, genomes,
                 jnp.asarray(edge_u, dtype=jnp.int32),
-                jnp.asarray(edge_v, dtype=jnp.int32))
+                jnp.asarray(edge_v, dtype=jnp.int32), self._mask(mask))
             return np.asarray(ms), np.asarray(feas)
 
 
@@ -694,7 +719,20 @@ class EnsembleJaxDES:
         self._compiled = _compiled_for(cfg, pad, ropt.warn_on_miss)
         self._leaves = tuple(getattr(self.arrays, f) for f in _ARRAY_FIELDS)
 
-    def ensemble_genome_makespan(self, genomes, edge_u, edge_v
+    def _masks(self, masks) -> jax.Array:
+        """(M, P, P) per-member availability factors (ones when healthy).
+        The k-failure objective stacks one DAG M times and passes one
+        failure scenario per member slot; the robust path leaves them at
+        ones -- both share the compiled executable."""
+        if masks is None:
+            return jnp.ones((len(self.problems), self.P, self.P))
+        masks = jnp.asarray(masks, dtype=jnp.float32)
+        if masks.ndim == 2:
+            masks = jnp.broadcast_to(masks, (len(self.problems), self.P,
+                                             self.P))
+        return masks
+
+    def ensemble_genome_makespan(self, genomes, edge_u, edge_v, masks=None
                                  ) -> tuple[np.ndarray, np.ndarray]:
         """(pop, E) genomes over the union pairs -> (pop, M) makespans and
         feasibility, one fused jitted call (scatter + members x genomes
@@ -705,14 +743,14 @@ class EnsembleJaxDES:
             ms, feas = self._compiled.ensemble_genomes(
                 self._leaves, genomes,
                 jnp.asarray(edge_u, dtype=jnp.int32),
-                jnp.asarray(edge_v, dtype=jnp.int32))
+                jnp.asarray(edge_v, dtype=jnp.int32), self._masks(masks))
             return np.asarray(ms), np.asarray(feas)
 
-    def makespans(self, x) -> tuple[np.ndarray, np.ndarray]:
+    def makespans(self, x, masks=None) -> tuple[np.ndarray, np.ndarray]:
         """Per-member (makespan, feasible) for one symmetric (P, P)
         topology, via the genome entry point (full-matrix scatter)."""
         eu = np.arange(self.P).repeat(self.P)
         ev = np.tile(np.arange(self.P), self.P)
         genome = np.asarray(x).reshape(-1)[None]
-        ms, feas = self.ensemble_genome_makespan(genome, eu, ev)
+        ms, feas = self.ensemble_genome_makespan(genome, eu, ev, masks)
         return ms[0], feas[0]

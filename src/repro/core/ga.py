@@ -630,6 +630,142 @@ def delta_robust(ensemble: DagEnsemble, opts: GAOptions | None = None,
         feasible=bool(np.isfinite(best_ms).all()))
 
 
+# ----------------------------------------------------------- DELTA-Failsafe
+FAILSAFE_OBJECTIVES = ("worst", "weighted")
+
+
+def failure_scenarios(dag: CommDAG, num_planes: int = 4, k: int = 1,
+                      include_healthy: bool = True) -> list[np.ndarray]:
+    """Fractional k-plane-loss masks for the k-failure worst-case plan.
+
+    One scenario per active pod pair: k of the `num_planes` OCS planes
+    serving that pair go dark, leaving (num_planes - k)/num_planes of its
+    circuit capacity.  The haircut is *fractional* on purpose -- circuits
+    are the only route between a pair, so a full kill would make the worst
+    case inf for every topology.  The healthy fabric is scenario 0, keeping
+    the worst-case plan honest on the intact fabric too.
+    """
+    P = dag.cluster.num_pods
+    frac = max(num_planes - k, 0) / num_planes
+    out = [np.ones((P, P))] if include_healthy else []
+    for (i, j) in dag.undirected_pairs():
+        m = np.ones((P, P))
+        m[i, j] = m[j, i] = frac
+        out.append(m)
+    return out
+
+
+class FailsafeFitness(EnsembleFitness):
+    """k-failure fitness: ONE DAG scored under a stack of degradation
+    masks through the per-member mask lane of `EnsembleJaxDES`.  Reuses
+    the whole ensemble plumbing by treating each failure scenario as a
+    member whose DAG is the same object."""
+
+    def __init__(self, dag: CommDAG, scenarios: list[np.ndarray],
+                 space: TopologySpace, opts: GAOptions, objective: str,
+                 refs: np.ndarray):
+        super().__init__(DagEnsemble([dag] * len(scenarios)), space, opts,
+                         objective, refs)
+        self.masks = np.stack([np.asarray(m, dtype=np.float64)
+                               for m in scenarios])
+
+    def member_makespans(self, genomes: np.ndarray) -> np.ndarray:
+        genomes = np.asarray(genomes, dtype=np.int64).reshape(-1,
+                                                              self.space.E)
+        if self._jd is not None:
+            genomes, k = self._padded(genomes)
+            ms, feas = self._jd.ensemble_genome_makespan(
+                genomes, self.space.edge_u, self.space.edge_v,
+                masks=self.masks)
+            self.batch_calls += 1
+            return np.where(feas, ms, INF)[:k]
+        out = np.empty((len(genomes), len(self.problems)))
+        for s, x in enumerate(self.space.to_matrix_batch(genomes)):
+            out[s] = [simulate(p, x * m).makespan
+                      for p, m in zip(self.problems, self.masks)]
+        return out
+
+    def exact_member_makespans(self, genome: np.ndarray) -> np.ndarray:
+        x = self.space.to_matrix(genome)
+        return np.array([simulate(p, x * m).makespan
+                         for p, m in zip(self.problems, self.masks)])
+
+
+def delta_failsafe(dag: CommDAG, opts: GAOptions | None = None,
+                   scenarios: list[np.ndarray] | None = None,
+                   num_planes: int = 4, k: int = 1,
+                   objective: str = "worst",
+                   xbar: np.ndarray | None = None,
+                   seeds: list[np.ndarray] | None = None) -> RobustGAResult:
+    """k-failure worst-case plan: one topology whose DES makespan is
+    minimized across a set of fabric-degradation scenarios (capacity
+    masks), scored in one fused masks x genomes vmap call per generation.
+
+    `scenarios` is a list of (P, P) availability masks (1 = healthy);
+    omitted, it defaults to `failure_scenarios(dag, num_planes, k)`.
+    `objective` is 'worst' (minimize the max scenario makespan) or
+    'weighted' (uniform mean).  The repair policy also calls this with a
+    single scenario -- the *current* fabric damage -- to produce a full
+    replan optimized for the degraded fabric.
+    """
+    opts = opts or GAOptions()
+    if objective not in FAILSAFE_OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"pick from {FAILSAFE_OBJECTIVES}")
+    if scenarios is None:
+        scenarios = failure_scenarios(dag, num_planes=num_planes, k=k)
+    scenarios = [np.asarray(m, dtype=np.float64) for m in scenarios]
+    if not scenarios:
+        raise ValueError("delta_failsafe needs at least one scenario")
+    t_start = time.time()
+    rng = np.random.default_rng(opts.seed)
+    space = TopologySpace(dag, xbar)
+    refs = np.ones(len(scenarios))   # worst == max-regret w.r.t. unit refs
+    eff = "max-regret" if objective == "worst" else "weighted"
+    fit = FailsafeFitness(dag, scenarios, space, opts, eff, refs)
+    t0 = time.time()
+
+    if space.E == 0:    # no inter-pod traffic: nothing to degrade
+        x = np.zeros((space.P, space.P), dtype=np.int64)
+        ms = fit.exact_member_makespans(np.zeros(0, dtype=np.int64))
+        obj = float(fit.scalarize(ms[None])[0])
+        return RobustGAResult(
+            x=x, makespans=ms, regrets=ms / refs, refs=refs,
+            weights=np.asarray(fit.ensemble.weights), objective=objective,
+            objective_value=obj, generations=0, evaluations=1,
+            elapsed=time.time() - t_start, history=[obj],
+            feasible=bool(np.isfinite(ms).all()))
+
+    with span("ga.evolve", kind="delta_failsafe", pop=opts.pop_size,
+              edges=space.E, members=len(scenarios)):
+        best_g, _, history, gen = _evolve(space, fit, opts, rng, t0, seeds)
+
+    # exact numpy re-rank per scenario (same f32-noise guard as the other
+    # engines: masked makespans are certified before the winner is named)
+    ranked = sorted(fit.cache.items(), key=lambda kv: kv[1])[:8]
+    best_key, best_score = best_g.tobytes(), INF
+    best_ms = fit.exact_member_makespans(best_g)
+    for key, fval in ranked:
+        if not np.isfinite(fval):
+            continue
+        g = np.frombuffer(key, dtype=np.int64)
+        ms = fit.exact_member_makespans(g)
+        score = float(fit.scalarize(ms[None])[0])
+        if np.isfinite(score):
+            score += opts.port_weight * float(g.sum())
+        if score < best_score:
+            best_score, best_key, best_ms = score, key, ms
+    best_g = np.frombuffer(best_key, dtype=np.int64)
+    obj = float(fit.scalarize(best_ms[None])[0])
+    return RobustGAResult(
+        x=space.to_matrix(best_g), makespans=best_ms,
+        regrets=best_ms / refs, refs=refs,
+        weights=np.asarray(fit.ensemble.weights), objective=objective,
+        objective_value=obj, generations=gen, evaluations=fit.evaluations,
+        elapsed=time.time() - t_start, history=history,
+        feasible=bool(np.isfinite(best_ms).all()))
+
+
 def trim_ports_ensemble(ensemble: DagEnsemble, x: np.ndarray,
                         rel_tol: float = 1e-6,
                         backend: str = "auto") -> np.ndarray:

@@ -41,6 +41,9 @@ VOL = 1e9  # internal volume unit (GB)
 
 _SOLVES = get_counter("milp_solves_total",
                       "MILP solver invocations by terminal status")
+_FALLBACKS = get_counter(
+    "fleet_fallbacks_total",
+    "solve_resilient fallback transitions, by chain stage")
 
 
 @dataclass
@@ -76,10 +79,16 @@ class MILPResult:
     total_ports: int = 0
     port_min_applied: bool = False
     stats: dict = field(default_factory=dict)
+    degraded: bool = False        # produced by a solve_resilient fallback
+    fallback_stage: str = ""      # "" | "ga" | "current"
 
     @property
     def feasible(self) -> bool:
-        return self.status in ("optimal", "feasible", "time_limit")
+        # a time_limit return with no incumbent carries makespan=inf: the
+        # finite check turns it into a clean fallback trigger instead of a
+        # silently-invalid plan (see solve_resilient)
+        return self.status in ("optimal", "feasible", "time_limit") \
+            and bool(np.isfinite(self.makespan))
 
 
 class _Model:
@@ -145,7 +154,11 @@ class _Model:
             )
             status = {0: "optimal", 1: "iteration_limit", 2: "infeasible",
                       3: "unbounded", 4: "error"}.get(res.status, "error")
-            if status == "iteration_limit" and res.x is not None:
+            if status == "iteration_limit":
+                # the budget expired; with no incumbent (res.x is None) the
+                # caller's z-None path returns makespan=inf, which the
+                # finite-makespan `feasible` guard turns into a clean
+                # fallback trigger rather than a silently-invalid plan
                 status = "time_limit"
             sp_.set(status=status)
             _SOLVES.inc(phase=phase, status=status)
@@ -538,7 +551,10 @@ class RobustMILPResult:
 
     @property
     def feasible(self) -> bool:
-        return self.status in ("optimal", "feasible", "time_limit")
+        # same finite guard as MILPResult: a budget expiry without an
+        # incumbent must read infeasible, not silently valid
+        return self.status in ("optimal", "feasible", "time_limit") \
+            and bool(np.isfinite(self.makespans).all())
 
     @property
     def total_ports(self) -> int:
@@ -694,6 +710,131 @@ def solve_robust_milp(ensemble: DagEnsemble,
         x=members[0].x, makespans=makespans, objective=objective,
         objective_value=obj_of(z), status=status, solve_time=solve_time,
         members=members, refs=refs, stats=stats)
+
+
+# ----------------------------------------------------------- DELTA-Failsafe
+def result_from_topology(dag: CommDAG, x: np.ndarray,
+                         mask: np.ndarray | None = None,
+                         status: str = "feasible") -> MILPResult:
+    """Build a `validate_solution`-clean MILPResult from a topology.
+
+    Runs the exact numpy DES with rate recording and converts its trace
+    into the MILP's schedule encoding: `t` is the DES event grid, `w[(m,k)]`
+    the volume task m moved inside interval k (each trace segment spans
+    exactly one event interval), `start`/`finish` the DES task times.  With
+    `mask`, capacity is degraded (`x * mask`) while the reported topology
+    stays the integer circuit matrix -- real capacities only shrink, so the
+    schedule still satisfies the nominal Eq. 9 link caps.  This is how the
+    fallback chain always returns a *valid* plan even when no solver does.
+    """
+    problem = DESProblem(dag)
+    x = np.asarray(x)
+    x_int = np.rint(x).astype(np.int64)
+    x_eff = x.astype(np.float64) * np.asarray(mask) if mask is not None \
+        else x
+    res = simulate(problem, x_eff, record_rates=True)
+    n = dag.num_tasks
+    if not res.feasible or not np.isfinite(res.makespan):
+        return MILPResult(
+            x=x_int, makespan=np.inf, status="infeasible", solve_time=0.0,
+            start=np.zeros(n), finish=np.zeros(n), t=np.zeros(1),
+            total_ports=int(x_int.sum()),
+            stats={"from_topology": True, "masked": mask is not None})
+    events = res.events
+    w: dict[tuple[int, int], float] = {}
+    for t0, t1, rates in res.rate_trace:
+        if t1 <= t0:
+            continue
+        k = int(np.searchsorted(events, t0 + 1e-15, side="right"))
+        k = min(max(k, 1), len(events) - 1)
+        for m in np.nonzero(rates > 0)[0]:
+            key = (int(m), k)
+            w[key] = w.get(key, 0.0) + float(rates[m]) * (t1 - t0)
+    y = {key: 1 for key in w}
+    return MILPResult(
+        x=x_int, makespan=float(res.makespan), status=status,
+        solve_time=0.0, start=res.start, finish=res.finish, t=events,
+        w=w, y=y, total_ports=int(x_int.sum()),
+        stats={"from_topology": True, "masked": mask is not None})
+
+
+def solve_resilient(dag: CommDAG, opts: MILPOptions | None = None, *,
+                    budget_s: float | None = None, retries: int = 1,
+                    backoff_s: float = 0.05,
+                    ga_options=None,
+                    current_x: np.ndarray | None = None,
+                    mask: np.ndarray | None = None) -> MILPResult:
+    """MILP solve with a wall-clock budget, retry/backoff on solver
+    exceptions, and a graceful fallback chain that ALWAYS returns a valid
+    plan:
+
+      1. `solve_delta_milp` under the remaining budget (retried with
+         backoff on exceptions; a budget expiry without an incumbent reads
+         infeasible via the finite-makespan guard and falls through),
+      2. a GA incumbent (`delta_fast`) converted to a schedule by
+         `result_from_topology`,
+      3. the current plan `current_x` with failed links masked (one
+         circuit everywhere if no current plan exists).
+
+    Fallback results carry `degraded=True` + `fallback_stage`, and every
+    stage transition increments `fleet_fallbacks_total{stage=...}`.
+    """
+    opts = opts or MILPOptions()
+    budget = float(budget_s) if budget_s is not None else opts.time_limit
+    t0 = time.time()
+    last_error: str | None = None
+
+    for attempt in range(max(int(retries), 0) + 1):
+        remaining = budget - (time.time() - t0)
+        if remaining <= 0:
+            _FALLBACKS.inc(stage="milp_budget")
+            break
+        try:
+            run_opts = dataclasses.replace(
+                opts, time_limit=min(opts.time_limit, remaining))
+            result = solve_delta_milp(dag, run_opts)
+        except Exception as exc:
+            last_error = f"{type(exc).__name__}: {exc}"
+            _FALLBACKS.inc(stage="milp_retry")
+            if attempt < retries:
+                time.sleep(min(backoff_s * (2 ** attempt), remaining))
+            continue
+        if result.feasible:
+            result.stats.setdefault("resilient", {}).update(
+                attempts=attempt + 1, budget_s=budget)
+            return result
+        last_error = f"status={result.status}"
+        break
+    _FALLBACKS.inc(stage="milp")
+
+    # ---- stage 2: GA incumbent
+    try:
+        from repro.core.ga import delta_fast
+        ga = delta_fast(dag, ga_options)
+        if ga.feasible:
+            res = result_from_topology(dag, ga.x, status="feasible")
+            if res.feasible:
+                res.degraded = True
+                res.fallback_stage = "ga"
+                res.stats["resilient"] = {"milp_error": last_error,
+                                          "budget_s": budget}
+                _FALLBACKS.inc(stage="ga")
+                return res
+    except Exception as exc:   # pragma: no cover - GA is pure numpy/jax
+        last_error = f"{last_error}; ga {type(exc).__name__}: {exc}"
+
+    # ---- stage 3: the current plan, failed links masked
+    if current_x is None:
+        P = dag.cluster.num_pods
+        current_x = np.zeros((P, P), dtype=np.int64)
+        for (i, j) in dag.undirected_pairs():
+            current_x[i, j] = current_x[j, i] = 1
+    res = result_from_topology(dag, current_x, mask=mask, status="feasible")
+    res.degraded = True
+    res.fallback_stage = "current"
+    res.stats["resilient"] = {"milp_error": last_error, "budget_s": budget}
+    _FALLBACKS.inc(stage="current")
+    return res
 
 
 def validate_solution(dag: CommDAG, res: MILPResult, tol: float = 1e-5

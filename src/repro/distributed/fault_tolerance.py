@@ -60,6 +60,23 @@ class FailureInjector:
             self.fired.add(step)
             raise RuntimeError(f"injected failure at step {step}")
 
+    @classmethod
+    def from_trace(cls, trace: list[dict]) -> "FailureInjector":
+        """Build from a shared-format fault trace
+        (`repro.fleet.faults.FaultInjector.trace` /
+        `step_failure_trace`): only `step_failure` entries are
+        training-loop faults; fabric entries (link/port/plane) belong to
+        the fleet layer (`repro.fleet.fault_events_from_trace`) and are
+        skipped here, so one seeded trace drives both failure models."""
+        steps = sorted({int(ev["step"]) for ev in trace
+                        if ev.get("kind") == "step_failure"})
+        return cls(fail_at=tuple(steps))
+
+    def to_trace(self) -> list[dict]:
+        """Export as shared-format `step_failure` entries."""
+        from repro.fleet.faults import step_failure_trace
+        return step_failure_trace(self.fail_at)
+
 
 def run_resilient(num_steps: int,
                   do_step: Callable[[int], dict],

@@ -3,19 +3,27 @@ and the event-driven replanning loop (paper Sec. VI as a long-lived
 service).  Entry point: `repro.core.api.fleet_optimize` or `FleetPlanner`.
 """
 from repro.fleet.admission import (AdmissionController, AdmissionError,
-                                   FleetSpec, Tenant)
+                                   FleetSpec, Tenant, shrink_to_limits)
+from repro.fleet.faults import (FabricHealth, FaultInjector,
+                                step_failure_trace)
 from repro.fleet.ledger import LedgerError, PortLedger, TenantAccount
-from repro.fleet.loop import (FleetPlanner, JobArrival, JobDeparture,
-                              TrafficChange, arrivals)
+from repro.fleet.loop import (FAULT_EVENTS, FleetPlanner, JobArrival,
+                              JobDeparture, LinkFailure, LinkRecovery,
+                              PlaneFailure, PlaneRecovery, PortFailure,
+                              PortRecovery, TrafficChange, arrivals,
+                              fault_events_from_trace)
 from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
 from repro.fleet.realloc import (ReallocResult, candidate_boosts,
                                  port_demand, reallocate, waterfill_grants)
 
 __all__ = [
     "AdmissionController", "AdmissionError", "FleetSpec", "Tenant",
-    "LedgerError", "PortLedger", "TenantAccount",
-    "FleetPlanner", "JobArrival", "JobDeparture", "TrafficChange",
-    "arrivals", "CachedPlan", "PlanCache", "dag_signature",
+    "shrink_to_limits", "FabricHealth", "FaultInjector",
+    "step_failure_trace", "LedgerError", "PortLedger", "TenantAccount",
+    "FAULT_EVENTS", "FleetPlanner", "JobArrival", "JobDeparture",
+    "LinkFailure", "LinkRecovery", "PlaneFailure", "PlaneRecovery",
+    "PortFailure", "PortRecovery", "TrafficChange", "arrivals",
+    "fault_events_from_trace", "CachedPlan", "PlanCache", "dag_signature",
     "ReallocResult", "candidate_boosts", "port_demand", "reallocate",
     "waterfill_grants",
 ]

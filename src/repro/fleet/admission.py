@@ -21,13 +21,17 @@ import numpy as np
 from repro.core.cluster import GBPS, ClusterSpec
 from repro.core.dag import CommDAG, DagEnsemble
 from repro.core.des import DESProblem, simulate
-from repro.core.ga import (GAOptions, delta_fast, delta_robust, trim_ports,
-                           trim_ports_ensemble)
+from repro.core.ga import (GAOptions, delta_failsafe, delta_fast,
+                           delta_robust, trim_ports, trim_ports_ensemble)
 from repro.core.schedule import build_comm_dag
 from repro.core.traffic import JobSpec
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
 from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
+from repro.fleet.realloc import (_candidate_genomes, _genome_view,
+                                 _greedy_fill, _scatter)
 from repro.obs import get_counter, get_logger, span
+
+INF = float("inf")
 
 _log = get_logger("repro.fleet")
 _PLANS = get_counter("fleet_plans_total",
@@ -36,6 +40,8 @@ _ROBUST_DEGRADED = get_counter(
     "fleet_robust_degraded_total",
     "robust replans degraded to a single-DAG plan (empty union space or "
     "infeasible member references)")
+_REPAIRS = get_counter("fleet_repairs_total",
+                       "fabric repair decisions, by chosen option")
 
 
 @dataclass(frozen=True)
@@ -350,9 +356,233 @@ class AdmissionController:
                            tenant.fleet_usage(self.fleet.num_pods))
         return plan
 
+    # --------------------------------------------------------------- repair
+    def repair(self, tenant: Tenant, mask: np.ndarray, *,
+               rng: np.random.Generator | None = None,
+               num_random: int = 8,
+               dwell_s: float = 600.0,
+               reconfig_s_per_circuit: float = 0.01,
+               replan_threshold: float = 1.2) -> dict:
+        """Price and apply one repair decision for a tenant under a fabric
+        capacity `mask` (its local (P, P) availability factor).
+
+        Three options compete on `cost = reconfiguration delay + dwell x
+        relative makespan inflation`:
+
+          keep     run the incumbent topology through the degraded fabric
+                   (zero delay, possibly large inflation -- or inf on a
+                   partition);
+          rewire   a mask-aware candidate portfolio within the tenant's
+                   CURRENT ledger limits, scored in one fused masked
+                   `batch_genome_makespan` call (cheap local surgery);
+          replan   full DELTA-Failsafe GA solve against the mask, only
+                   attempted when the best local option still inflates the
+                   makespan beyond `replan_threshold` (it is the expensive
+                   option, and cache-keyed by the rounded mask).
+
+        The winner is certified with the exact numpy DES under the mask and
+        committed to `tenant.plan` (and `base_plan`, so later grant
+        revocations restore the *repaired* topology).  The caller commits
+        the ledger allocation.  A mask of all-ones re-prices the plan at
+        healthy capacity and reports option "healthy".
+        """
+        mask = np.asarray(mask, dtype=np.float64)
+        problem = DESProblem(tenant.dag)
+        x0 = np.asarray(tenant.plan.x, dtype=np.int64)
+        # the committed plan's makespan may hold a *masked* value from a
+        # previous repair -- always re-derive the healthy baseline
+        healthy = simulate(problem, x0)
+        ms_healthy = healthy.makespan
+        ideal = tenant.plan.ideal_comm_time
+
+        def nct_of(comm_time: float) -> float:
+            return comm_time / ideal if ideal > 0 else INF
+
+        if float(mask.min(initial=1.0)) >= 1.0 - 1e-12:
+            tenant.plan.makespan = healthy.makespan
+            tenant.plan.comm_time = healthy.comm_time
+            tenant.plan.nct = nct_of(healthy.comm_time)
+            tenant.base_plan = tenant.plan.copy()
+            _REPAIRS.inc(option="healthy")
+            return {"tenant": tenant.name, "option": "healthy",
+                    "makespan": healthy.makespan,
+                    "ms_healthy": ms_healthy, "delay_s": 0.0,
+                    "cost_s": 0.0, "changed_circuits": 0, "options": {}}
+
+        def price(ms: float, delay: float) -> float:
+            """Seconds of delay now + expected seconds lost to the slowdown
+            over one phase dwell.  An infeasible (partitioned) option is
+            infinitely expensive."""
+            if not np.isfinite(ms):
+                return INF
+            infl = max(ms / ms_healthy - 1.0, 0.0) \
+                if np.isfinite(ms_healthy) and ms_healthy > 0 else 0.0
+            return delay + dwell_s * infl
+
+        # (name, x, masked makespan, delay, cost) -- list order breaks ties
+        ms_keep = simulate(problem, x0.astype(np.float64) * mask).makespan
+        options = [("keep", x0, ms_keep, 0.0, price(ms_keep, 0.0))]
+
+        limits = gather(self.ledger.limits(tenant.name), tenant.pods)
+        pairs = tenant.dag.undirected_pairs()
+        if pairs:
+            P = len(tenant.pods)
+            eu, ev, g0, rem = _genome_view(x0, pairs, P)
+            usage0 = rem.sum(axis=1)
+            rng = rng if rng is not None else np.random.default_rng(0)
+            G = _candidate_genomes(tenant.dag, g0, usage0, limits, eu, ev,
+                                   rng, num_random=num_random)
+            # mask-aware fill: a circuit on a degraded pair delivers only
+            # `frac` of its bandwidth, so compensating lost capacity means
+            # over-provisioning exactly those pairs (dead pairs excluded)
+            vol = tenant.dag.traffic_matrix()
+            uvol = vol[eu, ev] + vol[ev, eu]
+            frac = mask[eu, ev]
+            w_base = np.where(frac > 0, uvol / np.maximum(frac, 1e-9), -INF)
+            g_mask = _greedy_fill(
+                g0, usage0, limits, eu, ev,
+                lambda g: w_base / np.maximum(g, 1))
+            G = np.vstack([G, g_mask[None]])
+            _, first = np.unique(G, axis=0, return_index=True)
+            G = G[np.sort(first)]
+            ms_c, feas = tenant.des().batch_genome_makespan(G, eu, ev,
+                                                            mask=mask)
+            score = np.where(feas, np.asarray(ms_c), INF)
+            best = int(np.argmin(score))
+            x_rw = _scatter(G[best], eu, ev, P) + rem
+            cert = simulate(problem, x_rw.astype(np.float64) * mask)
+            delay = _circuit_changes(x_rw, x0) * reconfig_s_per_circuit
+            options.append(("rewire", x_rw, cert.makespan, delay,
+                            price(cert.makespan, delay)))
+
+        best_ms = min(o[2] for o in options)
+        inflation = best_ms / ms_healthy \
+            if np.isfinite(ms_healthy) and ms_healthy > 0 else INF
+        if inflation > replan_threshold:
+            def solve_failsafe() -> CachedPlan:
+                res = delta_failsafe(tenant.dag, self.ga_options,
+                                     scenarios=[mask])
+                cert = simulate(problem,
+                                np.asarray(res.x, np.float64) * mask)
+                return CachedPlan(
+                    x=np.asarray(res.x, dtype=np.int64),
+                    makespan=cert.makespan, comm_time=cert.comm_time,
+                    nct=nct_of(cert.comm_time), ideal_comm_time=ideal,
+                    details={"failsafe": True,
+                             "generations": res.generations,
+                             "evaluations": res.evaluations})
+
+            with span("fleet.repair_replan", tenant=tenant.name):
+                plan_fs, hit = self.cache.get_or_plan(
+                    tenant.dag, solve_failsafe,
+                    extra=("delta-failsafe",
+                           np.round(mask, 6).tobytes().hex()))
+            _PLANS.inc(path="failsafe", cache="hit" if hit else "miss")
+            x_fs = np.asarray(plan_fs.x, dtype=np.int64)
+            ms_fs = plan_fs.makespan
+            if (x_fs.sum(axis=1) > limits).any():
+                # the failsafe GA solves against the dag's admission-time
+                # port limits; the ledger may have seized ports since, so
+                # clamp the plan to what the tenant may wire today
+                x_fs = shrink_to_limits(x_fs, limits)
+                ms_fs = simulate(
+                    problem, x_fs.astype(np.float64) * mask).makespan
+            delay = _circuit_changes(x_fs, x0) * reconfig_s_per_circuit
+            options.append(("replan", x_fs, ms_fs, delay,
+                            price(ms_fs, delay)))
+
+        name_w, x_w, _ms_w, delay_w, cost_w = min(options,
+                                                  key=lambda o: o[4])
+        res = simulate(problem, x_w.astype(np.float64) * mask)
+        tenant.plan.x = np.asarray(x_w, dtype=np.int64)
+        tenant.plan.makespan = res.makespan
+        tenant.plan.comm_time = res.comm_time
+        tenant.plan.nct = nct_of(res.comm_time)
+        tenant.base_plan = tenant.plan.copy()
+        _REPAIRS.inc(option=name_w)
+        return {"tenant": tenant.name, "option": name_w,
+                "ms_healthy": ms_healthy, "makespan": res.makespan,
+                "delay_s": delay_w, "cost_s": cost_w,
+                "changed_circuits": int(_circuit_changes(x_w, x0)),
+                "options": {n: {"makespan": m, "delay_s": d, "cost_s": c}
+                            for n, _x, m, d, c in options}}
+
+    def replan_reduced(self, tenant: Tenant) -> dict:
+        """Rebuild the tenant's local view under its CURRENT ledger limits
+        (after a port seizure or restoration) and replan through the cache.
+
+        If the reduced budget makes the GA space infeasible (placement
+        degree above the port budget), fall back to deterministically
+        shrinking the incumbent topology to fit -- priced honestly with the
+        exact DES, possibly at an infinite makespan if shrinking
+        partitioned the job."""
+        tenant.dag = self.build_dag(tenant.name, tenant.job, tenant.pods,
+                                    tenant.reverse_stages)
+        tenant._des = None
+        tenant._xbar = None
+        limits = gather(self.ledger.limits(tenant.name), tenant.pods)
+        x_old = None if tenant.plan is None \
+            else np.asarray(tenant.plan.x, dtype=np.int64)
+        try:
+            with span("fleet.replan_reduced", tenant=tenant.name):
+                plan = self.plan(tenant)
+            return {"tenant": tenant.name, "path": "replan",
+                    "ports": int(plan.x.sum()), "makespan": plan.makespan,
+                    "limits": limits.tolist()}
+        except (ValueError, LedgerError) as exc:
+            if x_old is None:
+                raise
+            x = shrink_to_limits(x_old, limits)
+            problem = DESProblem(tenant.dag)
+            P = len(tenant.pods)
+            ideal = simulate(problem, np.zeros((P, P)), ideal=True)
+            res = simulate(problem, x)
+            nct = res.comm_time / ideal.comm_time \
+                if ideal.comm_time > 0 else INF
+            tenant.plan = CachedPlan(
+                x=x, makespan=res.makespan, comm_time=res.comm_time,
+                nct=nct, ideal_comm_time=ideal.comm_time,
+                details={"shrunk": True, "error": type(exc).__name__})
+            tenant.base_plan = tenant.plan.copy()
+            self.ledger.commit(tenant.name,
+                               tenant.fleet_usage(self.fleet.num_pods))
+            _PLANS.inc(path="shrink", cache="miss")
+            _log.warning(
+                "reduced replan for tenant %r fell back to topology "
+                "shrinking (limits %s): %s", tenant.name, limits.tolist(),
+                exc)
+            return {"tenant": tenant.name, "path": "shrink",
+                    "ports": int(x.sum()), "makespan": res.makespan,
+                    "limits": limits.tolist()}
+
     # ------------------------------------------------------------ departure
     def depart(self, tenant: Tenant) -> None:
         try:
             self.ledger.release(tenant.name)
         except LedgerError:   # already released (defensive)
             pass
+
+
+def shrink_to_limits(x: np.ndarray, limits: np.ndarray) -> np.ndarray:
+    """Deterministically drop circuits until per-pod usage fits `limits`:
+    repeatedly remove one circuit from the most-oversubscribed pod's
+    largest pair.  Always terminates with `x.sum(axis=1) <= limits`."""
+    x = np.asarray(x, dtype=np.int64).copy()
+    limits = np.asarray(limits, dtype=np.int64)
+    while True:
+        over = x.sum(axis=1) - limits
+        p = int(np.argmax(over))
+        if over[p] <= 0:
+            break
+        q = int(np.argmax(x[p]))
+        if x[p, q] <= 0:   # pragma: no cover - over>0 implies a circuit
+            break
+        x[p, q] -= 1
+        x[q, p] -= 1
+    return x
+
+
+def _circuit_changes(x_new: np.ndarray, x_old: np.ndarray) -> int:
+    """Circuits the OCS must tear down or set up to move between plans."""
+    d = np.abs(np.asarray(x_new, np.int64) - np.asarray(x_old, np.int64))
+    return int(np.triu(d, k=1).sum())

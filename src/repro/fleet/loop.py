@@ -15,6 +15,7 @@ checked after every event.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 
 import numpy as np
@@ -23,6 +24,7 @@ from repro.core.ga import GAOptions, ROBUST_OBJECTIVES
 from repro.core.traffic import JobSpec
 from repro.fleet.admission import (AdmissionController, AdmissionError,
                                    FleetSpec, Tenant)
+from repro.fleet.faults import FabricHealth
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
 from repro.fleet.plancache import PlanCache
 from repro.fleet.realloc import port_demand, reallocate, waterfill_grants
@@ -33,6 +35,8 @@ _EVENTS = get_counter("fleet_events_total",
 _GRANTS = get_counter("fleet_granted_ports_total",
                       "surplus ports granted by the waterfill pass")
 _TENANTS = get_gauge("fleet_tenants", "currently admitted tenants")
+_SNAPSHOTS = get_counter("fleet_snapshots_total",
+                         "planner state snapshots written to the journal")
 
 
 # ------------------------------------------------------------------- events
@@ -58,7 +62,78 @@ class TrafficChange:
     job: JobSpec
 
 
-FleetEvent = JobArrival | JobDeparture | TrafficChange
+@dataclass(frozen=True)
+class LinkFailure:
+    """A pod pair loses `fraction` of its circuit capacity (OCS plane
+    segment or fiber bundle serving that pair)."""
+    pair: tuple[int, int]
+    fraction: float = 1.0
+
+
+@dataclass(frozen=True)
+class LinkRecovery:
+    pair: tuple[int, int]
+
+
+@dataclass(frozen=True)
+class PortFailure:
+    """`count` physical OCS ports on `pod` go dark (ledger-visible)."""
+    pod: int
+    count: int = 1
+
+
+@dataclass(frozen=True)
+class PortRecovery:
+    pod: int
+    count: int = 1
+
+
+@dataclass(frozen=True)
+class PlaneFailure:
+    """A whole OCS plane goes dark: a uniform 1/num_planes capacity
+    haircut on every pod pair (also what staggered reconfiguration of a
+    parallel-plane fabric looks like)."""
+    plane: int
+
+
+@dataclass(frozen=True)
+class PlaneRecovery:
+    plane: int
+
+
+FleetEvent = (JobArrival | JobDeparture | TrafficChange | LinkFailure
+              | LinkRecovery | PortFailure | PortRecovery | PlaneFailure
+              | PlaneRecovery)
+
+FAULT_EVENTS = (LinkFailure, LinkRecovery, PortFailure, PortRecovery,
+                PlaneFailure, PlaneRecovery)
+
+
+def fault_events_from_trace(trace: list[dict]) -> list[FleetEvent]:
+    """Shared-trace-format dicts (`repro.fleet.faults.FaultInjector`) ->
+    live fleet fault events, in trace order (step_failure entries are
+    training-loop faults, not fleet events; they are skipped here)."""
+    out: list[FleetEvent] = []
+    for ev in trace:
+        kind = ev["kind"]
+        if kind == "link_failure":
+            out.append(LinkFailure(pair=tuple(ev["pair"]),
+                                   fraction=float(ev.get("fraction", 1.0))))
+        elif kind == "link_recovery":
+            out.append(LinkRecovery(pair=tuple(ev["pair"])))
+        elif kind == "port_failure":
+            out.append(PortFailure(pod=int(ev["pod"]),
+                                   count=int(ev.get("count", 1))))
+        elif kind == "port_recovery":
+            out.append(PortRecovery(pod=int(ev["pod"]),
+                                    count=int(ev.get("count", 1))))
+        elif kind == "plane_failure":
+            out.append(PlaneFailure(plane=int(ev["plane"])))
+        elif kind == "plane_recovery":
+            out.append(PlaneRecovery(plane=int(ev["plane"])))
+        elif kind != "step_failure":
+            raise ValueError(f"unknown trace kind {kind!r}")
+    return out
 
 
 # ------------------------------------------------------------------ planner
@@ -76,7 +151,12 @@ class FleetPlanner:
                  robust_objective: str = "max-regret",
                  robust_history: int = 3,
                  seed: int = 0,
-                 journal: FleetJournal | None = None):
+                 journal: FleetJournal | None = None,
+                 num_planes: int = 4,
+                 dwell_s: float = 600.0,
+                 reconfig_s_per_circuit: float = 0.01,
+                 replan_threshold: float = 1.2,
+                 snapshot_every: int = 0):
         self.fleet = fleet
         self.ledger = PortLedger(fleet.capacity())
         self.cache = cache if cache is not None else PlanCache()
@@ -104,6 +184,15 @@ class FleetPlanner:
         self.rng = np.random.default_rng(seed)
         self.realloc_batches = 0        # batched JaxDES calls issued
         self.realloc_candidates = 0     # topologies evaluated inside them
+        # fabric failure state + repair-pricing knobs (DELTA-Failsafe)
+        self.health = FabricHealth(fleet.num_pods, num_planes)
+        self.dwell_s = float(dwell_s)
+        self.reconfig_s_per_circuit = float(reconfig_s_per_circuit)
+        self.replan_threshold = float(replan_threshold)
+        self.snapshot_every = int(snapshot_every)
+        self._events_handled = 0
+        self._degraded: set[str] = set()   # tenants priced under a mask
+        self._shrunk: set[str] = set()     # tenants replanned under seizure
         self.history: list[dict] = []
         # structured decision log (JSONL-backed when given a path)
         self.journal = journal if journal is not None else FleetJournal()
@@ -119,8 +208,13 @@ class FleetPlanner:
         # fleet, then let the end-of-event surplus pass redistribute from
         # scratch over the new tenant mix
         kind = {JobArrival: "arrival", JobDeparture: "departure",
-                TrafficChange: "traffic_change"}.get(type(event), "unknown")
-        with span("fleet.handle", kind=kind, tenant=event.name):
+                TrafficChange: "traffic_change",
+                LinkFailure: "link_failure", LinkRecovery: "link_recovery",
+                PortFailure: "port_failure", PortRecovery: "port_recovery",
+                PlaneFailure: "plane_failure",
+                PlaneRecovery: "plane_recovery"}.get(type(event), "unknown")
+        who = getattr(event, "name", "fabric")
+        with span("fleet.handle", kind=kind, tenant=who):
             self.revoke_grants()
             try:
                 if isinstance(event, JobArrival):
@@ -129,6 +223,11 @@ class FleetPlanner:
                     record = self._on_departure(event)
                 elif isinstance(event, TrafficChange):
                     record = self._on_traffic_change(event)
+                elif isinstance(event, (LinkFailure, LinkRecovery,
+                                        PlaneFailure, PlaneRecovery)):
+                    record = self._on_fabric_change(event, kind)
+                elif isinstance(event, (PortFailure, PortRecovery)):
+                    record = self._on_port_change(event, kind)
                 else:
                     raise TypeError(f"unknown fleet event {event!r}")
             except Exception as exc:
@@ -137,7 +236,7 @@ class FleetPlanner:
                 # then propagate
                 _EVENTS.inc(kind=kind, outcome="error")
                 self.journal.record("fleet_error", event_kind=kind,
-                                    tenant=event.name,
+                                    tenant=who,
                                     error=type(exc).__name__)
                 if self.auto_realloc:
                     self.replan_surplus()
@@ -149,6 +248,11 @@ class FleetPlanner:
             _EVENTS.inc(kind=kind, outcome="ok")
             _TENANTS.set(len(self.tenants))
             self.journal.record_event(event, record)
+            self._events_handled += 1
+            if self.snapshot_every > 0 \
+                    and self._events_handled % self.snapshot_every == 0:
+                self.journal.record("fleet_snapshot", state=self.snapshot())
+                _SNAPSHOTS.inc()
             return record
 
     def process(self, events) -> list[dict]:
@@ -222,6 +326,95 @@ class FleetPlanner:
                 "worst_regret": details.get("worst_regret"),
                 "donated_ports": int(donated.sum())}
 
+    # ------------------------------------------------------- fabric faults
+    def _on_fabric_change(self, ev, kind: str) -> dict:
+        """Link / plane capacity events: mutate FabricHealth, then run the
+        priced repair decision for every tenant the damage (old or new)
+        touches, plus every tenant still priced under a previous mask."""
+        affected = {n for n, t in self.tenants.items()
+                    if self.health.affects(t.pods)}
+        if isinstance(ev, LinkFailure):
+            self.health.fail_link(ev.pair, ev.fraction)
+        elif isinstance(ev, LinkRecovery):
+            self.health.recover_link(ev.pair)
+        elif isinstance(ev, PlaneFailure):
+            self.health.fail_plane(ev.plane)
+        else:
+            self.health.recover_plane(ev.plane)
+        affected |= {n for n, t in self.tenants.items()
+                     if self.health.affects(t.pods)}
+        affected |= self._degraded & set(self.tenants)
+        repairs = []
+        for name in sorted(affected):
+            if self.tenants[name].plan is None:  # pragma: no cover
+                continue
+            repairs.append(self._repair_tenant(name))
+        mask = self.health.mask()
+        record = {"event": kind,
+                  "mask_min": float(mask.min()) if mask.size else 1.0,
+                  "healthy": self.health.healthy, "repairs": repairs}
+        if hasattr(ev, "pair"):
+            record["pair"] = list(ev.pair)
+        else:
+            record["plane"] = ev.plane
+        return record
+
+    def _repair_tenant(self, name: str) -> dict:
+        """One priced repair decision + ledger commit + degraded-set
+        bookkeeping for a single tenant under the current fabric mask."""
+        tenant = self.tenants[name]
+        decision = self.admission.repair(
+            tenant, self.health.local_mask(tenant.pods), rng=self.rng,
+            num_random=self.num_random_candidates,
+            dwell_s=self.dwell_s,
+            reconfig_s_per_circuit=self.reconfig_s_per_circuit,
+            replan_threshold=self.replan_threshold)
+        self.ledger.commit(name, tenant.fleet_usage(self.fleet.num_pods))
+        if decision["option"] == "healthy":
+            self._degraded.discard(name)
+        else:
+            self._degraded.add(name)
+        return decision
+
+    def _on_port_change(self, ev, kind: str) -> dict:
+        """Port failures hit the ledger (escalating pool -> grants ->
+        seized entitlement -> stranding); stranded tenants are replanned
+        under their reduced limits before the end-of-event check()."""
+        record: dict = {"event": kind, "pod": ev.pod, "count": ev.count}
+        replans: list[dict] = []
+        replanned: list[str] = []
+        if isinstance(ev, PortFailure):
+            stranded = self.ledger.fail_ports(ev.pod, ev.count)
+            for name in sorted(stranded):
+                tenant = self.tenants.get(name)
+                if tenant is None:   # pragma: no cover - defensive
+                    continue
+                replans.append(self.admission.replan_reduced(tenant))
+                self._shrunk.add(name)
+                replanned.append(name)
+            record["stranded"] = sorted(stranded)
+        else:
+            record["restored"] = int(
+                self.ledger.restore_ports(ev.pod, ev.count))
+            # shrunk tenants whose seizures are fully healed get their
+            # original budget (and, via the cache, original plan) back
+            for name in sorted(self._shrunk & set(self.tenants)):
+                if self.ledger.account(name).seized.sum() == 0:
+                    replans.append(
+                        self.admission.replan_reduced(self.tenants[name]))
+                    self._shrunk.discard(name)
+                    replanned.append(name)
+        # replan_reduced prices against the healthy fabric; on a damaged
+        # fabric the committed plan must carry masked pricing, so run the
+        # repair decision on every tenant that was just replanned
+        repairs = [self._repair_tenant(name) for name in replanned
+                   if self.health.affects(self.tenants[name].pods)]
+        if repairs:
+            record["repairs"] = repairs
+        record["replans"] = replans
+        record["failed_ports"] = int(self.ledger.failed.sum())
+        return record
+
     # -------------------------------------------------------- surplus pass
     def revoke_grants(self) -> int:
         """Take back every outstanding grant, restoring base plans."""
@@ -271,12 +464,17 @@ class FleetPlanner:
             self.ledger.grant(tenant.name, g)
             _GRANTS.inc(int(g.sum()))
             boosted = gather(self.ledger.limits(tenant.name), tenant.pods)
+            # a degraded tenant's committed plan is priced against the
+            # fabric mask; the surplus pass must keep pricing it that way
+            # or a grant would silently revert the plan to healthy numbers
+            mask = (self.health.local_mask(tenant.pods)
+                    if tenant.name in self._degraded else None)
             res = reallocate(
                 tenant.dag, tenant.plan.x, boosted,
                 tenant.plan.ideal_comm_time, des=tenant.des(), rng=self.rng,
                 num_random=self.num_random_candidates,
                 base_makespan=tenant.plan.makespan,
-                base_comm_time=tenant.plan.comm_time)
+                base_comm_time=tenant.plan.comm_time, mask=mask)
             self.realloc_batches += res.batch_calls
             self.realloc_candidates += res.num_candidates
             nct_before = tenant.plan.nct
@@ -298,6 +496,106 @@ class FleetPlanner:
                 "improved": res.improved,
                 "candidates": res.num_candidates})
         return outcomes
+
+    # ---------------------------------------------------- crash recovery
+    def snapshot(self) -> dict:
+        """Full JSON-safe planner state: ledger, fabric health, rng,
+        tenants (DAGs + plans), plan cache and decision history.  Written
+        to the journal every `snapshot_every` events; `restore`/`recover`
+        are the inverse."""
+        from repro.obs.journal import (_jobspec_to_dict, serialize_dag,
+                                       serialize_plan)
+        return {
+            "ledger": self.ledger.snapshot(),
+            "health": self.health.snapshot(),
+            "rng_state": self.rng.bit_generator.state,
+            "degraded": sorted(self._degraded),
+            "shrunk": sorted(self._shrunk),
+            "events_handled": self._events_handled,
+            "realloc": {"batches": self.realloc_batches,
+                        "candidates": self.realloc_candidates},
+            "cache_stats": [self.cache.hits, self.cache.misses],
+            "cache": {sig: serialize_plan(p)
+                      for sig, p in self.cache._store.items()},
+            "tenants": {
+                name: {"job": _jobspec_to_dict(t.job),
+                       "pods": list(t.pods),
+                       "reverse_stages": t.reverse_stages,
+                       "port_min": t.port_min,
+                       "dag": serialize_dag(t.dag),
+                       "dag_history": [serialize_dag(d)
+                                       for d in t.dag_history],
+                       "plan": serialize_plan(t.plan),
+                       "base_plan": serialize_plan(t.base_plan)}
+                for name, t in self.tenants.items()},
+            # copy: the in-memory journal keeps snapshot dicts by
+            # reference, and the live history keeps growing after this
+            "history": list(self.history),
+        }
+
+    @classmethod
+    def restore(cls, snap: dict, fleet: FleetSpec,
+                **kwargs) -> "FleetPlanner":
+        """Rebuild a planner from a `snapshot()` dict.  Constructor
+        options (`ga_options`, thresholds, `journal`, ...) are re-supplied
+        via kwargs; everything stateful comes from the snapshot."""
+        from repro.obs.journal import (_jobspec_from_dict, rebuild_dag,
+                                       rebuild_plan)
+        planner = cls(fleet, **kwargs)
+        planner.ledger = PortLedger.from_snapshot(snap["ledger"])
+        planner.admission.ledger = planner.ledger
+        planner.health = FabricHealth.from_snapshot(snap["health"])
+        planner.rng = np.random.default_rng(0)
+        planner.rng.bit_generator.state = snap["rng_state"]
+        planner._degraded = set(snap.get("degraded", ()))
+        planner._shrunk = set(snap.get("shrunk", ()))
+        planner._events_handled = int(snap.get("events_handled", 0))
+        planner.realloc_batches = int(snap["realloc"]["batches"])
+        planner.realloc_candidates = int(snap["realloc"]["candidates"])
+        hits, misses = snap.get("cache_stats", (0, 0))
+        planner.cache.hits, planner.cache.misses = int(hits), int(misses)
+        # in-place: admission shares this PlanCache object
+        planner.cache._store.clear()
+        planner.cache._store.update(
+            {sig: rebuild_plan(p) for sig, p in snap.get("cache",
+                                                         {}).items()})
+        for name, ts in snap.get("tenants", {}).items():
+            planner.tenants[name] = Tenant(
+                name=name, job=_jobspec_from_dict(ts["job"]),
+                pods=tuple(ts["pods"]),
+                reverse_stages=bool(ts["reverse_stages"]),
+                port_min=bool(ts["port_min"]),
+                dag=rebuild_dag(ts["dag"]),
+                dag_history=[rebuild_dag(d) for d in ts["dag_history"]],
+                plan=rebuild_plan(ts["plan"]),
+                base_plan=rebuild_plan(ts["base_plan"]))
+        planner.history = list(snap.get("history", []))
+        planner.ledger.check()
+        _TENANTS.set(len(planner.tenants))
+        return planner
+
+    @classmethod
+    def recover(cls, entries, fleet: FleetSpec, **kwargs) -> "FleetPlanner":
+        """Crash recovery from a journal (a path or its entry list):
+        restore the most recent `fleet_snapshot`, then replay the tail of
+        `fleet_event` entries through `handle()`.  With no snapshot the
+        whole journal is replayed from a fresh planner."""
+        from repro.obs.journal import rebuild_event
+        if isinstance(entries, (str, os.PathLike)):
+            entries = FleetJournal.load(entries)
+        snap_idx = max((i for i, e in enumerate(entries)
+                        if e.get("kind") == "fleet_snapshot"), default=None)
+        if snap_idx is None:
+            planner = cls(fleet, **kwargs)
+            tail = entries
+        else:
+            planner = cls.restore(entries[snap_idx]["state"], fleet,
+                                  **kwargs)
+            tail = entries[snap_idx + 1:]
+        for e in tail:
+            if e.get("kind") == "fleet_event":
+                planner.handle(rebuild_event(e["event"]))
+        return planner
 
     # ------------------------------------------------------------- reports
     def report(self) -> dict:

@@ -239,7 +239,8 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
                rng: np.random.Generator | None = None,
                num_random: int = 8,
                base_makespan: float | None = None,
-               base_comm_time: float | None = None) -> ReallocResult:
+               base_comm_time: float | None = None,
+               mask: np.ndarray | None = None) -> ReallocResult:
     """Re-optimize one tenant's topology under boosted port limits.
 
     All candidate genomes are scored by a single fused
@@ -248,13 +249,22 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
     communication time.
     Pass `base_makespan`/`base_comm_time` (the incumbent's known exact
     quality, e.g. from the committed plan) to skip re-simulating `x0`.
+    With `mask` (a (P, P) fabric availability factor), every evaluation --
+    batch scoring, base and certification sims -- runs at degraded
+    capacity, so grants to a tenant on a damaged fabric are priced against
+    the fabric it actually has.
     """
+
+    def _sim(x):
+        xe = np.asarray(x, dtype=np.float64)
+        return simulate(problem, xe * mask if mask is not None else xe)
+
     rng = rng or np.random.default_rng(0)
     problem = DESProblem(dag)
     pairs = dag.undirected_pairs()
     if not pairs:
         if base_makespan is None or base_comm_time is None:
-            base = simulate(problem, x0)
+            base = _sim(x0)
             base_makespan, base_comm_time = base.makespan, base.comm_time
         nct = base_comm_time / ideal_comm_time if ideal_comm_time > 0 else INF
         return ReallocResult(x=np.asarray(x0).copy(), makespan=base_makespan,
@@ -272,7 +282,7 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
         from repro.core.des_jax import DESOptions, JaxDES
         des = JaxDES(problem, options=DESOptions(warn_on_miss=True))
     # ONE fused genome-scatter + vmap call over the whole portfolio
-    ms, feas = des.batch_genome_makespan(G, eu, ev)
+    ms, feas = des.batch_genome_makespan(G, eu, ev, mask=mask)
     score = np.where(feas, ms, INF)
     # lexicographic tie-break: fewer total ports on ~equal makespan
     ports = 2 * G.sum(axis=1) + int(rem.sum())
@@ -282,12 +292,12 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
     best = int(np.lexsort((ports, rel))[0])
 
     if base_makespan is None or base_comm_time is None:
-        base = simulate(problem, x0)
+        base = _sim(x0)
         base_makespan, base_comm_time = base.makespan, base.comm_time
     makespan, comm_time = base_makespan, base_comm_time
     x_best = _scatter(G[best], eu, ev, P) + rem
     if best != 0:
-        cand = simulate(problem, x_best)          # certify the winner
+        cand = _sim(x_best)                       # certify the winner
         if cand.feasible and cand.comm_time <= base_comm_time * (1 + 1e-9):
             makespan, comm_time = cand.makespan, cand.comm_time
         else:

@@ -24,7 +24,8 @@ import json
 import os
 import threading
 
-__all__ = ["FleetJournal", "serialize_event", "rebuild_event"]
+__all__ = ["FleetJournal", "serialize_event", "rebuild_event",
+           "serialize_dag", "rebuild_dag", "serialize_plan", "rebuild_plan"]
 
 
 def _jobspec_to_dict(job) -> dict:
@@ -43,7 +44,9 @@ def _jobspec_from_dict(data: dict):
 
 def serialize_event(event) -> dict:
     """FleetEvent -> JSON-safe dict (kind + reconstruction fields)."""
-    from repro.fleet.loop import JobArrival, JobDeparture, TrafficChange
+    from repro.fleet.loop import (LinkFailure, LinkRecovery, JobArrival,
+                                  JobDeparture, PlaneFailure, PlaneRecovery,
+                                  PortFailure, PortRecovery, TrafficChange)
     if isinstance(event, JobArrival):
         return {"kind": "arrival", "name": event.name,
                 "job": _jobspec_to_dict(event.job),
@@ -56,12 +59,29 @@ def serialize_event(event) -> dict:
     if isinstance(event, TrafficChange):
         return {"kind": "traffic_change", "name": event.name,
                 "job": _jobspec_to_dict(event.job)}
+    if isinstance(event, LinkFailure):
+        return {"kind": "link_failure", "pair": list(event.pair),
+                "fraction": event.fraction}
+    if isinstance(event, LinkRecovery):
+        return {"kind": "link_recovery", "pair": list(event.pair)}
+    if isinstance(event, PortFailure):
+        return {"kind": "port_failure", "pod": event.pod,
+                "count": event.count}
+    if isinstance(event, PortRecovery):
+        return {"kind": "port_recovery", "pod": event.pod,
+                "count": event.count}
+    if isinstance(event, PlaneFailure):
+        return {"kind": "plane_failure", "plane": event.plane}
+    if isinstance(event, PlaneRecovery):
+        return {"kind": "plane_recovery", "plane": event.plane}
     raise TypeError(f"unknown fleet event {event!r}")
 
 
 def rebuild_event(data: dict):
     """Inverse of `serialize_event`."""
-    from repro.fleet.loop import JobArrival, JobDeparture, TrafficChange
+    from repro.fleet.loop import (LinkFailure, LinkRecovery, JobArrival,
+                                  JobDeparture, PlaneFailure, PlaneRecovery,
+                                  PortFailure, PortRecovery, TrafficChange)
     kind = data.get("kind")
     if kind == "arrival":
         return JobArrival(
@@ -75,7 +95,77 @@ def rebuild_event(data: dict):
     if kind == "traffic_change":
         return TrafficChange(name=data["name"],
                              job=_jobspec_from_dict(data["job"]))
+    if kind == "link_failure":
+        return LinkFailure(pair=tuple(data["pair"]),
+                           fraction=float(data.get("fraction", 1.0)))
+    if kind == "link_recovery":
+        return LinkRecovery(pair=tuple(data["pair"]))
+    if kind == "port_failure":
+        return PortFailure(pod=int(data["pod"]), count=int(data["count"]))
+    if kind == "port_recovery":
+        return PortRecovery(pod=int(data["pod"]), count=int(data["count"]))
+    if kind == "plane_failure":
+        return PlaneFailure(plane=int(data["plane"]))
+    if kind == "plane_recovery":
+        return PlaneRecovery(plane=int(data["plane"]))
     raise ValueError(f"unknown journal event kind {kind!r}")
+
+
+# ------------------------------------------------- snapshot serialization
+def serialize_dag(dag) -> dict:
+    """CommDAG -> JSON-safe dict (tasks / deps / cluster / meta)."""
+    return {
+        "tasks": [dataclasses.asdict(t) for t in dag.tasks],
+        "deps": [dataclasses.asdict(d) for d in dag.deps],
+        "cluster": dataclasses.asdict(dag.cluster),
+        "meta": {k: v for k, v in dag.meta.items()
+                 if isinstance(k, str)},
+    }
+
+
+def rebuild_dag(data: dict):
+    """Inverse of `serialize_dag` (tuple-typed fields restored)."""
+    from repro.core.cluster import ClusterSpec
+    from repro.core.dag import CommDAG, CommTask, Dep
+    tasks = []
+    for t in data["tasks"]:
+        kw = dict(t)
+        for f in ("src_gpus", "dst_gpus", "tag"):
+            kw[f] = tuple(tuple(e) if isinstance(e, list) else e
+                          for e in kw.get(f, ()))
+        tasks.append(CommTask(**kw))
+    deps = [Dep(**d) for d in data["deps"]]
+    ckw = dict(data["cluster"])
+    for f in dataclasses.fields(ClusterSpec):
+        if f.name in ckw and isinstance(ckw[f.name], list):
+            ckw[f.name] = tuple(ckw[f.name])
+    return CommDAG(tasks=tasks, deps=deps, cluster=ClusterSpec(**ckw),
+                   meta=data.get("meta", {}))
+
+
+def serialize_plan(plan) -> dict | None:
+    """CachedPlan -> JSON-safe dict (None passes through)."""
+    if plan is None:
+        return None
+    return {"x": plan.x.tolist(), "makespan": plan.makespan,
+            "comm_time": plan.comm_time, "nct": plan.nct,
+            "ideal_comm_time": plan.ideal_comm_time,
+            "details": json.loads(json.dumps(plan.details,
+                                             default=_json_default))}
+
+
+def rebuild_plan(data: dict | None):
+    """Inverse of `serialize_plan`."""
+    if data is None:
+        return None
+    import numpy as np
+    from repro.fleet.plancache import CachedPlan
+    return CachedPlan(
+        x=np.asarray(data["x"], dtype=np.int64),
+        makespan=float(data["makespan"]),
+        comm_time=float(data["comm_time"]), nct=float(data["nct"]),
+        ideal_comm_time=float(data["ideal_comm_time"]),
+        details=dict(data.get("details", {})))
 
 
 class FleetJournal:
