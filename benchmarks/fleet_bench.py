@@ -53,7 +53,7 @@ def run(full: bool = False) -> list[Row]:
 
         report = planner.report()
         gains = []
-        for name, t in planner.tenants.items():
+        for t in planner.tenants.values():
             if t.base_plan is not None and np.isfinite(t.base_plan.nct):
                 gains.append(t.base_plan.nct - t.plan.nct)
         mean_gain = float(np.mean(gains)) if gains else 0.0

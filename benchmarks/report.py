@@ -22,7 +22,8 @@ def dryrun_table() -> str:
              "| flops/dev | coll GiB/dev | #coll | compile s |",
              "|---|---|---|---|---|---|---|---|---|---|"]
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
-        c = json.load(open(path))
+        with open(path) as f:
+            c = json.load(f)
         if c["status"] == "ok":
             m = c["memory"]
             lines.append(
@@ -42,7 +43,8 @@ def dryrun_table() -> str:
 def fits_check(hbm_gib: float = 16.0) -> str:
     bad = []
     for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
-        c = json.load(open(path))
+        with open(path) as f:
+            c = json.load(f)
         if c["status"] != "ok":
             continue
         m = c["memory"]
@@ -60,7 +62,8 @@ def fits_check(hbm_gib: float = 16.0) -> str:
 def main() -> None:
     ok = skipped = 0
     for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
-        c = json.load(open(path))
+        with open(path) as f:
+            c = json.load(f)
         ok += c["status"] == "ok"
         skipped += c["status"] == "skipped"
     print("## Dry-run summary\n")

@@ -1,0 +1,43 @@
+"""DELTA-Sentinel: repo-specific static analysis (stdlib-only, AST-based).
+
+Every correctness bug this repo shipped and later fixed was a *class*, not
+a one-off: `JobSpec.ep` plumbed but never read (PR 3), the jitted DES
+silently downcasting float64 caps (PR 2), `optimize()` mutating the
+caller's `MILPOptions` (PR 1), `solve` extracting garbage from a
+`time_limit` status with no incumbent (PR 7).  Sentinel turns each fixed
+bug class into a machine-checked rule (`RPR###` codes) so it cannot
+regress, the way the benchmark gate made perf regressions unshippable.
+
+Usage:
+
+    PYTHONPATH=src python -m repro.analysis src tests benchmarks
+
+Per-line suppression:   ``# sentinel: ignore[RPR001]`` (trailing comment on
+the reported line; several codes separated by commas, bare
+``# sentinel: ignore`` suppresses every rule on the line).
+
+Grandfathered findings live in ``sentinel_baseline.json`` (see
+`repro.analysis.baseline`); `repro.analysis.check_baseline` is the CI
+guard that keeps the baseline from growing silently.
+
+This package intentionally imports nothing outside the standard library,
+so the CI sentinel job runs on a bare Python install.
+"""
+from repro.analysis.engine import (FileContext, Finding, Rule, RULES,
+                                   analyze_paths, collect_contexts,
+                                   iter_python_files)
+from repro.analysis.baseline import Baseline
+from repro.analysis.report import render_json, render_text
+
+__all__ = [
+    "Baseline",
+    "FileContext",
+    "Finding",
+    "RULES",
+    "Rule",
+    "analyze_paths",
+    "collect_contexts",
+    "iter_python_files",
+    "render_json",
+    "render_text",
+]

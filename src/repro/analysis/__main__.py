@@ -1,0 +1,93 @@
+"""Sentinel CLI.
+
+    PYTHONPATH=src python -m repro.analysis src tests benchmarks
+
+Exit status 0 = no non-baselined findings, 1 = findings (or stale
+baseline), 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis.baseline import DEFAULT_BASELINE, Baseline
+from repro.analysis.engine import RULES, analyze_paths
+from repro.analysis.report import (render_json, render_rule_catalog,
+                                   render_text)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="DELTA-Sentinel repo-specific static analysis")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to analyze")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule codes (default: all)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit JSON instead of text")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline file (default {DEFAULT_BASELINE}; "
+                         f"ignored when absent)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, baselined or not")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings to --baseline and "
+                         "exit 0 (grandfathering; guarded in CI by "
+                         "repro.analysis.check_baseline)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from repro.analysis import rules as _rules  # noqa: F401
+        print(render_rule_catalog())
+        return 0
+    if not args.paths:
+        ap.error("no paths given (try: src tests benchmarks)")
+
+    select = [s.strip() for s in args.select.split(",") if s.strip()] or None
+    if select:
+        from repro.analysis import rules as _rules  # noqa: F401
+        unknown = [s for s in select if s not in RULES and s != "RPR000"]
+        if unknown:
+            ap.error(f"unknown rule code(s) {unknown}; "
+                     f"known: {sorted(RULES)}")
+
+    findings = analyze_paths(args.paths, select=select)
+    nfiles = len(list(_count_files(args.paths)))
+
+    if args.write_baseline:
+        Baseline.from_findings(findings).save(args.baseline)
+        print(f"wrote {len(findings)} entr{'y' if len(findings) == 1 else 'ies'} "
+              f"to {args.baseline}")
+        return 0
+
+    baselined: list = []
+    stale: list = []
+    if not args.no_baseline and os.path.exists(args.baseline):
+        bl = Baseline.load(args.baseline)
+        findings, baselined, stale = bl.split(findings)
+
+    render = render_json if args.as_json else render_text
+    out = render(findings, baselined, nfiles)
+    if out:
+        print(out, end="" if out.endswith("\n") else "\n")
+    for e in stale:
+        print(f"# stale baseline entry (no longer matches anything -- "
+              f"remove it): {e['rule']} {e['path']} {e['key']}")
+    return 1 if findings or stale else 0
+
+
+def _count_files(paths):
+    from repro.analysis.engine import iter_python_files
+    return iter_python_files(paths)
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:   # e.g. `... --list-rules | head`
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        sys.exit(0)

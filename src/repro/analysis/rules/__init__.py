@@ -1,0 +1,17 @@
+"""Sentinel rules: importing this package registers every rule.
+
+Catalog (one rule per documented historical bug class):
+
+  RPR001  unread-field              the PR-3 `JobSpec.ep` bug
+  RPR002  caller-options-mutation   the PR-1 `MILPOptions` bug
+  RPR003  jit-float64-downcast      the PR-2 DES cap-dtype bug
+  RPR004  bare-host-array-hot-path  the PR-2 bug's host-side twin
+  RPR005  solver-status-gate        the PR-7 time_limit/no-incumbent bug
+  RPR006  jit-host-sync             live hazard on the PR-5 jit seams
+  RPR007  jit-impurity              live hazard since PR-6 obs tracing
+  RPR008  cache-key-hygiene         PR-5 CompiledDES bucket keys
+"""
+from repro.analysis.rules import (cachekey, dtype, fields, jit, mutation,
+                                  solver)
+
+__all__ = ["cachekey", "dtype", "fields", "jit", "mutation", "solver"]

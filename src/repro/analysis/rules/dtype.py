@@ -1,0 +1,151 @@
+"""RPR003/RPR004: dtype hazards on the host/device seam of hot paths.
+
+History: PR 2 fixed the DES capacity buffers being built as float64 on the
+host and silently downcast at the jit boundary (JAX runs with x64
+*disabled*), which made long-horizon makespans drift by whole timesteps.
+Two rules encode the lesson, both scoped to the hot modules (`des_jax`,
+`kernels`) where a dtype seam is a correctness bug rather than a style
+nit:
+
+* RPR003 -- an explicit ``dtype=jnp.float64`` (or ``"float64"`` /
+  ``np.float64``) passed to a ``jnp.*`` constructor.  With x64 disabled
+  this is a silent no-op downcast to float32: the author *believes* they
+  requested double precision and nobody gets it.
+
+* RPR004 -- a bare host-side ``np.*`` array construction whose default
+  dtype is float64 (``np.zeros``/``ones``/``full``/``empty``/
+  ``linspace``, or ``np.array``/``asarray`` over float payloads) with no
+  explicit ``dtype=``.  The array crosses to the device as float32 while
+  host-side consumers keep float64 -- the exact PR-2 seam.  Chained
+  ``.astype(...)`` makes the intent explicit and is accepted.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import FileContext, Finding, call_name, rule
+
+# modules where the host/device dtype seam is load-bearing
+_HOT_MARKERS = ("des_jax", "kernels")
+
+_F64_DEFAULT_CTORS = {"zeros", "ones", "full", "empty", "linspace",
+                      "zeros_like", "ones_like", "full_like", "empty_like",
+                      "eye", "identity"}
+_ARRAY_CTORS = {"array", "asarray", "ascontiguousarray"}
+
+
+def _is_hot(ctx: FileContext) -> bool:
+    return any(m in ctx.path for m in _HOT_MARKERS)
+
+
+def _dtype_kw(node: ast.Call) -> ast.expr | None:
+    for kw in node.keywords:
+        if kw.arg == "dtype":
+            return kw.value
+    return None
+
+
+def _is_float64(expr: ast.expr) -> bool:
+    if isinstance(expr, ast.Constant) and expr.value in ("float64", "f8"):
+        return True
+    name = call_name(expr)
+    return name in ("jnp.float64", "np.float64", "numpy.float64",
+                    "jax.numpy.float64", "float64")
+
+
+def _astype_wrapped(tree: ast.Module) -> set[ast.Call]:
+    """Calls that are immediately chained into `.astype(...)`."""
+    wrapped: set[ast.Call] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "astype" and \
+                isinstance(node.value, ast.Call):
+            wrapped.add(node.value)
+    return wrapped
+
+
+def _has_float_payload(node: ast.Call) -> bool:
+    """True when an np.array/asarray argument visibly carries floats."""
+    for arg in node.args[:1]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, float):
+                return True
+            if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Div):
+                return True
+    return False
+
+
+@rule(
+    code="RPR003",
+    name="jit-float64-downcast",
+    summary="explicit dtype=float64 on a jnp constructor in a hot module "
+            "(x64 is disabled: this silently produces float32)",
+    bug="PR 2: DES capacity buffers requested float64 under jnp; with x64 "
+        "disabled the request is a silent downcast and makespans drifted",
+)
+def check_rpr003(ctxs: list[FileContext]) -> Iterable[Finding]:
+    for ctx in ctxs:
+        if not _is_hot(ctx):
+            continue
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node.func)
+            if not (name.startswith("jnp.") or name.startswith("jax.numpy.")):
+                continue
+            dt = _dtype_kw(node)
+            if dt is not None and _is_float64(dt):
+                yield Finding(
+                    rule="RPR003", path=ctx.path, line=node.lineno,
+                    message=f"`{name}(..., dtype=float64)` in a hot module: "
+                            f"JAX x64 is disabled here, so this silently "
+                            f"yields float32 (the PR-2 downcast bug); use "
+                            f"float32 explicitly or route through "
+                            f"jax.config if double precision is required",
+                    key=f"{name}:{_nearest_scope(ctx.tree, node)}")
+
+
+@rule(
+    code="RPR004",
+    name="bare-host-array-hot-path",
+    summary="np.* array construction with float64 default dtype and no "
+            "explicit dtype= in a hot module (host/device dtype seam)",
+    bug="PR 2: host-side float64 staging arrays crossed the jit boundary "
+        "as float32 while host consumers stayed float64",
+)
+def check_rpr004(ctxs: list[FileContext]) -> Iterable[Finding]:
+    for ctx in ctxs:
+        if not _is_hot(ctx):
+            continue
+        wrapped = _astype_wrapped(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) or node in wrapped:
+                continue
+            name = call_name(node.func)
+            if not (name.startswith("np.") or name.startswith("numpy.")):
+                continue
+            tail = name.split(".")[-1]
+            if _dtype_kw(node) is not None:
+                continue
+            if tail in _F64_DEFAULT_CTORS or \
+                    (tail in _ARRAY_CTORS and _has_float_payload(node)):
+                yield Finding(
+                    rule="RPR004", path=ctx.path, line=node.lineno,
+                    message=f"`{name}(...)` defaults to float64 on the "
+                            f"host but the device side of this module runs "
+                            f"float32 (the PR-2 seam); pass an explicit "
+                            f"dtype= or chain .astype(...)",
+                    key=f"{name}:{_nearest_scope(ctx.tree, node)}")
+
+
+def _nearest_scope(tree: ast.Module, target: ast.AST) -> str:
+    """Enclosing function/class name for a stable, line-free key."""
+    best = "<module>"
+    tline = getattr(target, "lineno", 0)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            end = getattr(node, "end_lineno", node.lineno)
+            if node.lineno <= tline <= end:
+                best = node.name
+    return best

@@ -1,0 +1,368 @@
+"""RPR006/RPR007: host syncs and impurity inside jit-traced code.
+
+History: the PR-5 kernel-fused DES moved the event loop under `jax.jit` /
+`lax.while_loop`, and PR-6 added `repro.obs` tracing spans.  Both changes
+created a standing hazard class: code that is *reachable from a trace
+context* silently misbehaves when it branches on traced values (trace-time
+constant folding), forces host syncs (`.item()`, `float(...)` -- a device
+round-trip per call inside the hot loop), or calls impure host APIs
+(`time.*`, `random.*`, `repro.obs` spans -- these run ONCE at trace time
+and never again, so the metric/span is a lie).
+
+The rules build a conservative call graph:
+
+* seeds -- functions passed to ``jax.jit``/``vmap``/``pmap``,
+  ``jax.lax.while_loop``/``scan``/``cond``/``fori_loop``,
+  ``pl.pallas_call`` (including through ``functools.partial``), and
+  functions decorated ``@jax.jit`` / ``@partial(jax.jit, ...)``;
+* edges -- calls to module-level functions, ``self.`` methods, and
+  attributes of corpus-module import aliases.
+
+Inside reachable functions, a value is treated as *traced* when it is a
+local assigned from a ``jnp.*``/``jax.*`` expression -- ``.shape`` /
+``.dtype`` / ``.ndim`` / ``.size`` derivations are static under trace and
+excluded, as are plain parameters (static arguments like a mode string
+would otherwise drown the signal).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Iterable
+
+from repro.analysis.engine import FileContext, Finding, call_name, rule
+
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+_IMPURE_PREFIXES = ("time.", "random.", "np.random.", "numpy.random.",
+                    "datetime.", "secrets.")
+_OBS_MODULE = "repro.obs"
+
+
+# ------------------------------------------------------------- call graph
+@dataclass
+class _Fn:
+    key: tuple[str, str]            # (path, qualname)
+    node: ast.FunctionDef | ast.AsyncFunctionDef
+    ctx: FileContext
+    cls: str | None
+
+
+def _collect_functions(ctxs: list[FileContext]) -> dict[tuple, _Fn]:
+    fns: dict[tuple, _Fn] = {}
+    for ctx in ctxs:
+        for node in ctx.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                key = (ctx.path, node.name)
+                fns[key] = _Fn(key, node, ctx, None)
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        key = (ctx.path, f"{node.name}.{sub.name}")
+                        fns[key] = _Fn(key, sub, ctx, node.name)
+    return fns
+
+
+def _import_map(ctx: FileContext) -> tuple[dict[str, str],
+                                           dict[str, tuple[str, str]]]:
+    """(module aliases, from-imports): `import x.y as z` -> {z: 'x.y'};
+    `from x import f` -> {f: ('x', 'f')}."""
+    aliases: dict[str, str] = {}
+    froms: dict[str, tuple[str, str]] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                froms[a.asname or a.name] = (node.module, a.name)
+    return aliases, froms
+
+
+def _resolve_ref(expr: ast.AST, ctx: FileContext,
+                 fns: dict[tuple, _Fn],
+                 module_fns: dict[tuple[str, str], tuple],
+                 aliases: dict[str, str],
+                 froms: dict[str, tuple[str, str]]) -> tuple | None:
+    """Map a function reference expression to a _Fn key, if in-corpus."""
+    if isinstance(expr, ast.Call) and call_name(expr.func) in (
+            "functools.partial", "partial"):
+        if expr.args:
+            return _resolve_ref(expr.args[0], ctx, fns, module_fns,
+                                aliases, froms)
+        return None
+    if isinstance(expr, ast.Name):
+        key = (ctx.path, expr.id)
+        if key in fns:
+            return key
+        if expr.id in froms:
+            mod, orig = froms[expr.id]
+            return module_fns.get((mod, orig))
+        return None
+    if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+        base = expr.value.id
+        if base == "self":
+            for key, fn in fns.items():
+                if key[0] == ctx.path and fn.cls and \
+                        key[1].endswith("." + expr.attr):
+                    return key
+            return None
+        mod = aliases.get(base)
+        if mod is None and base in froms:
+            parent, orig = froms[base]
+            mod = f"{parent}.{orig}"
+        if mod is not None:
+            return module_fns.get((mod, expr.attr))
+    return None
+
+
+_SEED_CALLS = {
+    "jax.jit": [0], "jit": [0], "jax.vmap": [0], "vmap": [0],
+    "jax.pmap": [0],
+    "jax.lax.while_loop": [0, 1], "lax.while_loop": [0, 1],
+    "jax.lax.scan": [0], "lax.scan": [0],
+    "jax.lax.cond": [1, 2], "lax.cond": [1, 2],
+    "jax.lax.fori_loop": [2], "lax.fori_loop": [2],
+    "jax.lax.map": [0], "lax.map": [0],
+    "pl.pallas_call": [0], "pallas_call": [0],
+    "jax.checkpoint": [0], "jax.remat": [0],
+}
+
+
+def _jit_decorated(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        name = call_name(dec.func) if isinstance(dec, ast.Call) \
+            else call_name(dec)
+        if name in ("jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap"):
+            return True
+        if name in ("functools.partial", "partial") and \
+                isinstance(dec, ast.Call) and dec.args and \
+                call_name(dec.args[0]) in ("jax.jit", "jit", "jax.vmap",
+                                           "vmap"):
+            return True
+    return False
+
+
+def _reachable(ctxs: list[FileContext]) -> dict[tuple, _Fn]:
+    fns = _collect_functions(ctxs)
+    module_fns: dict[tuple[str, str], tuple] = {}
+    for key, fn in fns.items():
+        if fn.cls is None and fn.ctx.module:
+            module_fns[(fn.ctx.module, key[1])] = key
+
+    seeds: set[tuple] = set()
+    imports = {ctx.path: _import_map(ctx) for ctx in ctxs}
+    for key, fn in fns.items():
+        if _jit_decorated(fn.node):
+            seeds.add(key)
+    for ctx in ctxs:
+        aliases, froms = imports[ctx.path]
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node.func)
+            idxs = _SEED_CALLS.get(name)
+            if idxs is None:
+                continue
+            for i in idxs:
+                if i < len(node.args):
+                    key = _resolve_ref(node.args[i], ctx, fns, module_fns,
+                                       aliases, froms)
+                    if key is not None:
+                        seeds.add(key)
+
+    # transitive closure over in-corpus call edges
+    reached: dict[tuple, _Fn] = {}
+    frontier = list(seeds)
+    while frontier:
+        key = frontier.pop()
+        if key in reached or key not in fns:
+            continue
+        fn = fns[key]
+        reached[key] = fn
+        aliases, froms = imports[fn.ctx.path]
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Call):
+                tgt = _resolve_ref(node.func, fn.ctx, fns, module_fns,
+                                   aliases, froms)
+                if tgt is not None and tgt not in reached:
+                    frontier.append(tgt)
+    return reached
+
+
+# ------------------------------------------------------ traced-value model
+def _is_jnp_expr(expr: ast.AST) -> bool:
+    """Expression contains a jnp./jax. call (device-producing)."""
+    return any(
+        isinstance(node, ast.Call) and call_name(node.func).startswith(
+            ("jnp.", "jax.numpy.", "jax.lax.", "lax."))
+        for node in ast.walk(expr))
+
+
+def _is_static_derivation(expr: ast.AST) -> bool:
+    """`x.shape`, `x.dtype`, `x.shape[0]`, `len(...)` -- static at trace."""
+    node = expr
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return True
+    if isinstance(node, ast.Call) and call_name(node.func) == "len":
+        return True
+    return False
+
+
+def _traced_locals(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    traced: set[str] = set()
+    for _ in range(2):  # one re-pass picks up traced-from-traced chains
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                value, targets = node.value, node.targets
+            elif isinstance(node, ast.AugAssign):
+                value, targets = node.value, [node.target]
+            else:
+                continue
+            derived = _is_jnp_expr(value) or any(
+                isinstance(n, ast.Name) and n.id in traced and
+                isinstance(n.ctx, ast.Load) for n in ast.walk(value))
+            if not derived or _is_static_derivation(value):
+                continue
+            for tgt in targets:
+                elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) \
+                    else [tgt]
+                for e in elts:
+                    if isinstance(e, ast.Name):
+                        traced.add(e.id)
+    return traced
+
+
+def _traced_usage(expr: ast.AST, traced: set[str]) -> bool:
+    """A traced name (or jnp call) used in `expr` NOT under a static
+    `.shape`/`.dtype`/... derivation."""
+    if _is_static_derivation(expr):
+        return False
+    if isinstance(expr, ast.Attribute):
+        if expr.attr in _STATIC_ATTRS:
+            return False
+        return _traced_usage(expr.value, traced)
+    if isinstance(expr, ast.Name):
+        return expr.id in traced
+    if isinstance(expr, ast.Call):
+        name = call_name(expr.func)
+        if name.startswith(("jnp.", "jax.numpy.", "jax.lax.", "lax.")):
+            return True
+        return any(_traced_usage(a, traced) for a in expr.args)
+    for child in ast.iter_child_nodes(expr):
+        if _traced_usage(child, traced):
+            return True
+    return False
+
+
+# ------------------------------------------------------------------ rules
+@rule(
+    code="RPR006",
+    name="jit-host-sync",
+    summary="host sync or Python control flow on traced values inside a "
+            "jit-reachable function",
+    bug="PR 5 moved the DES event loop under jit: .item()/float() force a "
+        "device round-trip per call; `if` on a traced value is folded at "
+        "trace time and never re-evaluated",
+)
+def check_rpr006(ctxs: list[FileContext]) -> Iterable[Finding]:
+    for key, fn in _reachable(ctxs).items():
+        traced = _traced_locals(fn.node)
+        qual = key[1]
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Call):
+                name = call_name(node.func)
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args:
+                    yield Finding(
+                        rule="RPR006", path=fn.ctx.path, line=node.lineno,
+                        message=f"`.item()` inside jit-reachable "
+                                f"`{qual}`: forces a device->host sync per "
+                                f"call (and fails under trace); keep the "
+                                f"value on-device or hoist the sync out "
+                                f"of the jitted body",
+                        key=f"{qual}:item")
+                elif name in ("float", "int", "bool") and len(node.args) \
+                        == 1 and _traced_usage(node.args[0], traced):
+                    yield Finding(
+                        rule="RPR006", path=fn.ctx.path, line=node.lineno,
+                        message=f"`{name}(...)` on a traced value inside "
+                                f"jit-reachable `{qual}`: host sync / "
+                                f"ConcretizationTypeError under trace; "
+                                f"use jnp casts (.astype) instead",
+                        key=f"{qual}:{name}")
+            elif isinstance(node, (ast.If, ast.While)):
+                if _traced_usage(node.test, traced):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield Finding(
+                        rule="RPR006", path=fn.ctx.path, line=node.lineno,
+                        message=f"Python `{kind}` on a traced value inside "
+                                f"jit-reachable `{qual}`: the branch is "
+                                f"folded once at trace time and never "
+                                f"re-evaluated; use jnp.where / "
+                                f"lax.cond / lax.while_loop",
+                        key=f"{qual}:{kind}")
+            elif isinstance(node, ast.Assert) and \
+                    _traced_usage(node.test, traced):
+                yield Finding(
+                    rule="RPR006", path=fn.ctx.path, line=node.lineno,
+                    message=f"`assert` on a traced value inside "
+                            f"jit-reachable `{qual}`: evaluated once at "
+                            f"trace time only; use "
+                            f"jax.debug or checkify for runtime checks",
+                    key=f"{qual}:assert")
+
+
+@rule(
+    code="RPR007",
+    name="jit-impurity",
+    summary="impure host API (time/random/obs spans) or host numpy on "
+            "traced operands inside a jit-reachable function",
+    bug="PR 6 added repro.obs spans: a span or time.time() inside a jitted "
+        "body runs once at trace time, so the recorded metric is a lie",
+)
+def check_rpr007(ctxs: list[FileContext]) -> Iterable[Finding]:
+    for key, fn in _reachable(ctxs).items():
+        traced = _traced_locals(fn.node)
+        qual = key[1]
+        aliases, froms = _import_map(fn.ctx)
+        obs_names = {local for local, (mod, _) in froms.items()
+                     if mod == _OBS_MODULE or mod.startswith(_OBS_MODULE + ".")}
+        obs_aliases = {a for a, mod in aliases.items()
+                       if mod == _OBS_MODULE or
+                       mod.startswith(_OBS_MODULE + ".")}
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node.func)
+            if name.startswith(_IMPURE_PREFIXES):
+                yield Finding(
+                    rule="RPR007", path=fn.ctx.path, line=node.lineno,
+                    message=f"`{name}(...)` inside jit-reachable "
+                            f"`{qual}`: runs ONCE at trace time, then the "
+                            f"traced constant is reused forever; hoist it "
+                            f"out of the jitted body (or thread a PRNG "
+                            f"key for randomness)",
+                    key=f"{qual}:{name}")
+            elif name.split(".")[0] in obs_names or \
+                    name.split(".")[0] in obs_aliases:
+                yield Finding(
+                    rule="RPR007", path=fn.ctx.path, line=node.lineno,
+                    message=f"repro.obs call `{name}(...)` inside "
+                            f"jit-reachable `{qual}`: spans/metrics fire "
+                            f"once at trace time, so the recorded timing "
+                            f"is a lie; instrument the host-side caller "
+                            f"instead",
+                    key=f"{qual}:{name}")
+            elif name.startswith(("np.", "numpy.")) and \
+                    not name.startswith(("np.random.", "numpy.random.")) \
+                    and any(_traced_usage(a, traced) for a in node.args):
+                yield Finding(
+                    rule="RPR007", path=fn.ctx.path, line=node.lineno,
+                    message=f"host numpy `{name}(...)` on a traced "
+                            f"operand inside jit-reachable `{qual}`: "
+                            f"forces a sync and detaches the value "
+                            f"from the trace; use the jnp equivalent",
+                    key=f"{qual}:{name}")

@@ -209,7 +209,8 @@ def delta_fast(dag: CommDAG, opts: GAOptions | None = None,
     stall = 0
     gen = 0
 
-    for gen in range(1, opts.max_generations + 1):
+    while gen < opts.max_generations:
+        gen += 1
         if time.time() - t0 > opts.time_limit or stall >= opts.patience:
             break
         order = np.argsort(fitness)

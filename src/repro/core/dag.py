@@ -189,7 +189,7 @@ class CommDAG:
         def classes(of: dict[int, list[int]]):
             seen: dict[tuple[int, ...], int] = {}
             out: list[tuple[tuple[int, ...], float]] = []
-            for g, tids in of.items():
+            for tids in of.values():
                 key = tuple(sorted(tids))
                 if key not in seen:
                     seen[key] = len(out)
@@ -243,6 +243,11 @@ class CommDAG:
         }
 
 
+# default-argument sentinel for DagEnsemble.weights: lets the field carry a
+# real ndarray type while __post_init__ substitutes uniform weights
+_UNIFORM_WEIGHTS: np.ndarray = np.empty(0, dtype=np.float64)
+
+
 @dataclass
 class DagEnsemble:
     """A *set* of reduced CommDAGs sharing one physical cluster.
@@ -262,7 +267,7 @@ class DagEnsemble:
 
     members: list[CommDAG]
     names: list[str] = field(default_factory=list)
-    weights: np.ndarray = None  # type: ignore[assignment]
+    weights: np.ndarray = field(default_factory=lambda: _UNIFORM_WEIGHTS)
     meta: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:
@@ -280,7 +285,7 @@ class DagEnsemble:
                 f"{len(self.names)} names for {len(self.members)} members")
         if len(set(self.names)) != len(self.names):
             raise ValueError(f"duplicate member names: {self.names}")
-        if self.weights is None:
+        if self.weights is None or self.weights is _UNIFORM_WEIGHTS:
             self.weights = np.ones(len(self.members))
         self.weights = np.asarray(self.weights, dtype=np.float64)
         if self.weights.shape != (len(self.members),):

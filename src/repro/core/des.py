@@ -331,6 +331,14 @@ class NCTReport:
             return 1.0 if self.comm_time <= 0 else INF
         return self.comm_time / self.ideal_comm_time
 
+    @property
+    def stretch(self) -> float:
+        """End-to-end slowdown vs the contention-free ideal (>= 1); the
+        makespan analogue of `nct`."""
+        if self.ideal_makespan <= 0:
+            return 1.0 if self.makespan <= 0 else INF
+        return self.makespan / self.ideal_makespan
+
 
 def evaluate_nct(problem: DESProblem, x: np.ndarray,
                  ideal_result: DESResult | None = None) -> NCTReport:

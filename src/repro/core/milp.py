@@ -22,6 +22,7 @@ constraint matrix well conditioned.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from dataclasses import dataclass, field
@@ -170,15 +171,15 @@ class _Model:
 
 @dataclass
 class _Layout:
-    """Variable indices for one assembled model."""
+    """Variable indices one assembled model's *extraction* needs.
+
+    Assembly-only index maps (edge_of, Lbits, beta, rho, u) live as locals
+    in the builders: storing them here was write-only plumbing (RPR001).
+    """
     edges: list[tuple[int, int]]
-    edge_of: dict[tuple[int, int], int]
-    Lbits: list[int]
     x: np.ndarray
-    beta: list[np.ndarray]
     t: np.ndarray
     delta: np.ndarray
-    rho: dict[tuple[int, int], np.ndarray]   # (e, b) -> per-k vars
     w: dict[tuple[int, int], int]
     y: dict[tuple[int, int], int]
     s: dict[tuple[int, int], int]
@@ -187,7 +188,6 @@ class _Layout:
     C: int
     K: int
     windows: IndexWindows
-    u: dict[tuple[int, int], int]
 
 
 def _build_topology(md: _Model, cluster, edges: list[tuple[int, int]],
@@ -377,9 +377,8 @@ def _build_member(md: _Model, dag: CommDAG, fairness: bool,
                     md.row({u_: 1.0, wv[(m, k)]: -1.0 / f, y_: Mu},
                            -np.inf, Mu)
 
-    return _Layout(edges=edges, edge_of=edge_of, Lbits=Lbits, x=xv,
-                   beta=beta, t=tv, delta=dv, rho=rho, w=wv, y=yv, s=sv,
-                   S=Sv, Cm=Cv, C=Cvar, K=K, windows=windows, u=uv)
+    return _Layout(edges=edges, x=xv, t=tv, delta=dv, w=wv, y=yv, s=sv,
+                   S=Sv, Cm=Cv, C=Cvar, K=K, windows=windows)
 
 
 def _build(dag: CommDAG, opts: MILPOptions, windows: IndexWindows,
@@ -463,11 +462,10 @@ def solve_delta_milp(dag: CommDAG, opts: MILPOptions | None = None
         # the activation pattern to a near-optimal schedule instead of the
         # one-circuit baseline.  K keeps the default profile as a floor so
         # the seeded windows never have fewer intervals than the baseline.
-        try:
+        with contextlib.suppress(RuntimeError):
+            # an infeasible seed keeps the default profile
             sb, sa, sk = profile_anchors(problem, np.asarray(opts.seed_x))
             baseline, anchors, K_prof = sb, sa, max(sk, K_prof)
-        except RuntimeError:
-            pass    # infeasible seed: keep the default profile
     t_up = opts.t_up or estimate_t_up(problem)
     K = opts.K or (K_prof + opts.k_slack)
     if opts.prune:
@@ -614,12 +612,11 @@ def solve_robust_milp(ensemble: DagEnsemble,
             # below is only attainable if the pruned windows can express
             # a schedule under the seed topology, so re-profile from it
             # (K keeps the baseline profile as a floor)
-            try:
+            with contextlib.suppress(RuntimeError):
+                # an infeasible seed on this member keeps the default
                 _, sa, sk = profile_anchors(problem,
                                             np.asarray(opts.seed_x))
                 anchors, K_prof = sa, max(sk, K_prof)
-            except RuntimeError:
-                pass    # infeasible seed on this member: keep the default
         t_up = opts.t_up or estimate_t_up(problem)
         K = opts.K or (K_prof + opts.k_slack)
         anchors_used = anchors if opts.prune else None
@@ -844,7 +841,7 @@ def validate_solution(dag: CommDAG, res: MILPResult, tol: float = 1e-5
     B = dag.cluster.nic_bandwidth
     # conservation
     vol_sent = {m: 0.0 for m in range(1, dag.num_tasks)}
-    for (m, k), v in res.w.items():
+    for (m, _k), v in res.w.items():
         vol_sent[m] += v
     for t_ in dag.real_tasks():
         if abs(vol_sent[t_.tid] - t_.volume) > tol * max(t_.volume, 1.0):

@@ -117,7 +117,7 @@ def solve_fixed_step(dag: CommDAG, dt: float, t_up: float | None = None,
             md.row(coeffs, float(np.ceil(d.delta / dt)), np.inf)
 
     if fairness:                                              # Eq. 29
-        for (i, j), tids in tasks_on.items():
+        for tids in tasks_on.values():
             Mu = max(float(flows[m]) * B for m in tids)
             for t in range(1, T + 1):
                 u_ = md.var(0.0, Mu)

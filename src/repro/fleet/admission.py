@@ -14,6 +14,7 @@ fleet-wide PlanCache.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -557,10 +558,8 @@ class AdmissionController:
 
     # ------------------------------------------------------------ departure
     def depart(self, tenant: Tenant) -> None:
-        try:
+        with contextlib.suppress(LedgerError):   # already released
             self.ledger.release(tenant.name)
-        except LedgerError:   # already released (defensive)
-            pass
 
 
 def shrink_to_limits(x: np.ndarray, limits: np.ndarray) -> np.ndarray:

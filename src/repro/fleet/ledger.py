@@ -32,22 +32,28 @@ class LedgerError(RuntimeError):
     """An operation would violate port conservation."""
 
 
+# default-argument sentinel for TenantAccount's book arrays: keeps the
+# fields typed as real ndarrays while __post_init__ substitutes zeros
+# shaped like `entitled`
+_UNSET_BOOK: np.ndarray = np.empty(0, dtype=np.int64)
+
+
 @dataclass
 class TenantAccount:
     """Per-tenant port books, all arrays indexed by *fleet* pod id."""
 
     name: str
     entitled: np.ndarray
-    donated: np.ndarray = field(default=None)  # type: ignore[assignment]
-    granted: np.ndarray = field(default=None)  # type: ignore[assignment]
-    allocated: np.ndarray = field(default=None)  # type: ignore[assignment]
-    seized: np.ndarray = field(default=None)  # type: ignore[assignment]
+    donated: np.ndarray = field(default_factory=lambda: _UNSET_BOOK)
+    granted: np.ndarray = field(default_factory=lambda: _UNSET_BOOK)
+    allocated: np.ndarray = field(default_factory=lambda: _UNSET_BOOK)
+    seized: np.ndarray = field(default_factory=lambda: _UNSET_BOOK)
 
     def __post_init__(self) -> None:
         self.entitled = np.asarray(self.entitled, dtype=np.int64)
         zeros = np.zeros_like(self.entitled)
         for f in ("donated", "granted", "allocated", "seized"):
-            if getattr(self, f) is None:
+            if getattr(self, f) is None or getattr(self, f) is _UNSET_BOOK:
                 setattr(self, f, zeros.copy())
 
     @property

@@ -77,18 +77,18 @@ class _Comp:
 def _parse_operands(rest: str) -> tuple[list[str], str]:
     """Operand names inside the first balanced paren group of `rest`."""
     depth = 1
-    out = []
-    i = 0
+    end = len(rest) - 1
     for i, ch in enumerate(rest):
         if ch == "(":
             depth += 1
         elif ch == ")":
             depth -= 1
             if depth == 0:
+                end = i
                 break
-    args = rest[:i]
+    args = rest[:end]
     out = re.findall(r"%([\w.\-]+)", args)
-    return out, rest[i + 1:]
+    return out, rest[end + 1:]
 
 
 def parse_computations(text: str) -> dict[str, _Comp]:

@@ -177,7 +177,8 @@ class FleetJournal:
         self._lock = threading.Lock()
         self._fh: io.TextIOBase | None = None
         if self.path is not None:
-            self._fh = open(self.path, "a")
+            # long-lived append handle, closed by close()/__exit__
+            self._fh = open(self.path, "a")  # noqa: SIM115
 
     # ------------------------------------------------------------ recording
     def record(self, kind: str, **fields) -> dict:

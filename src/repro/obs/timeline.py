@@ -173,7 +173,7 @@ def schedule_timeline(dag: CommDAG, x: np.ndarray,
     B = dag.cluster.nic_bandwidth
     xm = np.asarray(x)
     caps = {pair: float(xm[pair]) * B for pair in problem.pairs}
-    for t0, t1, rates in result.rate_trace:
+    for t0, _t1, rates in result.rate_trace:
         per_link = np.zeros(len(problem.pairs))
         np.add.at(per_link, problem.task_pair[problem.task_pair >= 0],
                   rates[np.nonzero(problem.task_pair >= 0)[0]])

@@ -1,0 +1,23 @@
+"""RPR001 fixture: one unread field, one read field, one swept class."""
+from dataclasses import dataclass
+from typing import NamedTuple
+
+
+@dataclass(frozen=True)
+class Spec:
+    used: int
+    ghost: int  # TP: written at construction, read nowhere
+
+
+def consume(s: Spec) -> int:
+    return s.used  # near miss: `used` is read
+
+
+class Swept(NamedTuple):
+    a: int
+    b: int
+
+
+# near miss: a `_fields` sweep makes Swept's reads untrackable by name,
+# so the rule must skip the whole class
+_ALL_FIELDS = Swept._fields

@@ -1,0 +1,30 @@
+"""RPR002 fixture: caller-passed options mutation vs. the safe idioms."""
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass
+class RetryOptions:
+    limit: int = 3
+
+
+def peek(opts: RetryOptions) -> int:
+    return opts.limit  # keeps the field read (out of RPR001's scope)
+
+
+def bad(opts: RetryOptions) -> None:
+    opts.limit = 5  # TP: caller's object mutated
+
+
+def bad_fallback(opts=None) -> None:
+    opts = opts or RetryOptions()
+    opts.limit = 7  # TP: `or` fallback still aliases the caller's object
+
+
+def good(opts: RetryOptions) -> None:
+    opts = dataclasses.replace(opts, limit=5)
+    opts.limit = 9  # near miss: mutation of a local copy
+
+
+def _private(opts: RetryOptions) -> None:
+    opts.limit = 11  # near miss: private helpers own their arguments

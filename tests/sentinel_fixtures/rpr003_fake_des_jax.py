@@ -1,0 +1,9 @@
+"""RPR003 fixture (hot-path pathname): explicit float64 under jnp."""
+import jax.numpy as jnp
+
+
+def build_caps(n):
+    caps = jnp.zeros((n,), dtype=jnp.float64)  # TP: silent downcast
+    rates = jnp.zeros((n,), dtype=jnp.float32)  # near miss: explicit f32
+    ids = jnp.arange(n, dtype=jnp.int32)  # near miss: integer dtype
+    return caps, rates, ids

@@ -1,0 +1,11 @@
+"""RPR004 fixture (hot-path pathname): bare float64-default np arrays."""
+import numpy as np
+
+
+def stage(vals):
+    buf = np.zeros((8,))  # TP: float64 default crosses the device seam
+    payload = np.array([1.0, 2.0])  # TP: float payload, no dtype
+    typed = np.zeros((8,), dtype=np.float32)  # near miss: explicit dtype
+    cast = np.array([3.0, 4.0]).astype(np.float32)  # near miss: .astype
+    idx = np.array([1, 2])  # near miss: integer payload
+    return buf, payload, typed, cast, idx

@@ -1,0 +1,25 @@
+"""RPR005 fixture: solver payloads used with and without status gates."""
+
+
+def bad_unpack(md):
+    status, x, info = md.solve()
+    return x.sum()  # TP: no `x is None` gate
+
+
+def good_unpack(md):
+    status, x, info = md.solve()
+    if x is None:  # near miss: gated
+        return None
+    return x.sum()
+
+
+def bad_result(dag):
+    res = solve_delta_milp(dag)  # noqa: F821 -- fixture, never executed
+    return res.x  # TP: payload read, feasible/status never consulted
+
+
+def good_result(dag):
+    res = solve_delta_milp(dag)  # noqa: F821
+    if not res.feasible:  # near miss: gated
+        return None
+    return res.x

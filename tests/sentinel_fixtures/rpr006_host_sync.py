@@ -1,0 +1,27 @@
+"""RPR006 fixture: host syncs / Python control flow on traced values."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad(a):
+    s = jnp.cumsum(a)
+    if s[0] > 0:  # TP: branch folded at trace time
+        s = s + 1
+    return float(s[0])  # TP: host sync on a traced value
+
+
+@jax.jit
+def bad_item(a):
+    return jnp.sum(a).item()  # TP: device round-trip inside jit
+
+
+@jax.jit
+def good(a, mode: str = "fast"):
+    s = jnp.cumsum(a)
+    n = s.shape[0]
+    if n > 1:  # near miss: shape is static under trace
+        s = s * 2
+    if mode == "fast":  # near miss: plain parameter, not traced
+        s = s + 1
+    return jnp.where(s > 0, s, 0.0)  # near miss: traced branch done right

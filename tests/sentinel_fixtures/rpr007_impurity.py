@@ -1,0 +1,33 @@
+"""RPR007 fixture: impure host APIs inside (transitively) jitted code."""
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs import span
+
+
+@jax.jit
+def bad(a):
+    t0 = time.time()  # TP: runs once at trace time
+    b = jnp.sum(a)
+    c = np.asarray(b)  # TP: host numpy on a traced operand
+    return _helper(b), t0, c
+
+
+def _helper(b):
+    return b * random.random()  # TP: transitively jit-reachable
+
+
+@jax.jit
+def bad_span(a):
+    with span("fixture.trace"):  # TP: span fires once at trace time
+        return jnp.sum(a)
+
+
+def host(a):
+    t0 = time.time()  # near miss: plain host function, not jit-reachable
+    with span("fixture.host"):  # near miss
+        return np.asarray(a), t0

@@ -1,0 +1,55 @@
+"""RPR008 fixture: cache keys that are not hashable statics."""
+import functools
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+
+_CACHE = {}
+
+
+class Cfg(NamedTuple):
+    d: int
+    e: int
+
+
+class ArrBox(NamedTuple):
+    a: np.ndarray
+
+
+@dataclass
+class MutableBox:
+    v: int
+
+
+def bad_param(arrs: list):
+    _CACHE[(arrs, 3)] = 1  # TP: list-annotated parameter in the key
+
+
+def bad_local():
+    k = [1, 2]
+    _CACHE[(k, 0)] = 1  # TP: local list in the key
+
+
+def bad_dataclass():
+    b = MutableBox(1)
+    _CACHE[(b,)] = 1  # TP: non-frozen dataclass is unhashable
+
+
+def bad_arraybox(a):
+    box = ArrBox(a)
+    _CACHE[(box, 2)] = 1  # TP: hash recurses into the ndarray field
+
+
+@functools.lru_cache
+def bad_lru(xs: list):  # TP: unhashable lru_cache parameter
+    return sum(xs)
+
+
+def good(cfg: Cfg, d: int):
+    _CACHE[(cfg, d)] = 2  # near miss: scalar NamedTuple + int
+
+
+@functools.lru_cache
+def good_lru(n: int):  # near miss
+    return n * 2

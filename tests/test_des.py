@@ -141,6 +141,9 @@ def test_property_more_circuits_never_hurt(dag):
 def test_property_nct_at_least_one(dag):
     rep = evaluate_nct(DESProblem(dag), one_circuit_topology(dag))
     assert rep.nct >= 1 - 1e-6
+    # contention can only slow the end-to-end makespan down, too (RPR001:
+    # stretch is the consumer of NCTReport.ideal_makespan)
+    assert rep.stretch >= 1 - 1e-6
 
 
 def test_rate_trace_conserves_volume(small_dag):

@@ -62,6 +62,7 @@ def test_topology_constraints(dag, topo_result):
 def test_port_minimization_keeps_makespan(dag, joint_result):
     r2 = solve_delta_milp(dag, MILPOptions(fairness=False, port_min=True,
                                            time_limit=90))
+    assert r2.feasible  # RPR005: gate before reading the payload
     assert r2.port_min_applied
     assert r2.total_ports <= joint_result.total_ports
     assert r2.makespan <= joint_result.makespan * (1 + 1e-4)
@@ -86,6 +87,7 @@ def test_hot_start_does_not_cut_optimum(dag):
         dag, MILPOptions(fairness=False, time_limit=90, hot_start=True))
     r_cold = solve_delta_milp(
         dag, MILPOptions(fairness=False, time_limit=90, hot_start=False))
+    assert r_hot.feasible and r_cold.feasible  # RPR005
     assert r_hot.makespan == pytest.approx(r_cold.makespan, rel=5e-3)
 
 
@@ -172,3 +174,6 @@ def test_fixed_step_consistent_with_variable(dag, joint_result):
         assert fs.makespan >= joint_result.makespan * (1 - 1e-6)
         assert fs.makespan <= joint_result.makespan * 1.5 + 2 * dt
         assert fs.stats["nvars"] > joint_result.stats["nvars"]
+        # the time grid must cover the reported makespan (RPR001: the
+        # consumer of FixedStepResult.num_slices)
+        assert fs.num_slices * dt >= fs.makespan - 1e-9

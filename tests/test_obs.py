@@ -116,10 +116,9 @@ class TestTracing:
 
     def test_exception_safety(self):
         tr = Tracer(enabled=True)
-        with pytest.raises(RuntimeError):
-            with tr.span("outer"):
-                with tr.span("boom"):
-                    raise RuntimeError("x")
+        with pytest.raises(RuntimeError), tr.span("outer"), \
+                tr.span("boom"):
+            raise RuntimeError("x")
         recs = {r.name: r for r in tr.records}
         assert recs["boom"].attrs["error"] == "RuntimeError"
         assert recs["outer"].attrs["error"] == "RuntimeError"
@@ -157,9 +156,8 @@ class TestTracing:
 
     def test_enabled_context_manager_restores(self):
         tr = Tracer(enabled=False)
-        with tr.enabled(True):
-            with tr.span("x"):
-                pass
+        with tr.enabled(True), tr.span("x"):
+            pass
         assert not tr.is_enabled
         assert len(tr.records) == 1
 

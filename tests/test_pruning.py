@@ -93,7 +93,7 @@ def test_xbound_upper_bounds_des_concurrency(dag):
     res = simulate(prob, np.minimum(x, np.minimum.outer(U, U)),
                    record_rates=True)
     flows = dag.flows()
-    for t0, t1, rates in res.rate_trace:
+    for _t0, _t1, rates in res.rate_trace:
         active = rates > 0
         for i, j in dag.pod_pairs():
             tids = [t.tid for t in dag.real_tasks()

@@ -263,6 +263,7 @@ def test_robust_milp_singleton_matches_single():
     dag = _tiny((0, 1), (1, 2))
     opts = MILPOptions(time_limit=60, mip_rel_gap=1e-3)
     single = solve_delta_milp(dag, opts)
+    assert single.feasible  # RPR005: gate before reading the payload
     rob = solve_robust_milp(DagEnsemble.singleton(dag), opts,
                             objective="weighted")
     assert rob.makespans[0] == pytest.approx(single.makespan, rel=1e-5)
@@ -293,6 +294,7 @@ def test_robust_milp_seed_cut_and_port_min():
     base = solve_robust_milp(ens, MILPOptions(time_limit=60,
                                               mip_rel_gap=1e-3),
                              objective="weighted")
+    assert base.feasible  # RPR005: gate before seeding from base.x
     seeded = solve_robust_milp(
         ens, MILPOptions(time_limit=60, mip_rel_gap=1e-3, port_min=True,
                          seed_x=base.x), objective="weighted")

@@ -1,0 +1,245 @@
+"""DELTA-Sentinel self-tests: golden fixture findings, suppression and
+baseline mechanics, CLI exit codes, and the baseline-growth CI guard.
+
+The fixtures under tests/sentinel_fixtures/ each seed at least one true
+positive and one near miss per rule; the golden keys below pin both
+directions (a rule that stops firing OR starts flagging the idiomatic
+pattern fails here).
+"""
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, analyze_paths
+from repro.analysis.__main__ import main as sentinel_main
+from repro.analysis.check_baseline import main as guard_main
+from repro.analysis.engine import RULES, FileContext
+
+REPO = Path(__file__).resolve().parents[1]
+FIX = REPO / "tests" / "sentinel_fixtures"
+
+GOLDEN = {
+    "RPR001": (FIX / "rpr001", {"Spec.ghost"}),
+    "RPR002": (FIX / "rpr002", {"bad.opts", "bad_fallback.opts"}),
+    "RPR003": (FIX / "rpr003_fake_des_jax.py", {"jnp.zeros:build_caps"}),
+    "RPR004": (FIX / "rpr004_fake_kernels.py",
+               {"np.zeros:stage", "np.array:stage"}),
+    "RPR005": (FIX / "rpr005_solver_gate.py",
+               {"bad_unpack.x", "bad_result.res"}),
+    "RPR006": (FIX / "rpr006_host_sync.py",
+               {"bad:if", "bad:float", "bad_item:item"}),
+    "RPR007": (FIX / "rpr007_impurity.py",
+               {"bad:time.time", "bad:np.asarray", "_helper:random.random",
+                "bad_span:span"}),
+    "RPR008": (FIX / "rpr008_cache_keys.py",
+               {"bad_param:key[0]", "bad_local:key[0]",
+                "bad_dataclass:key[0]", "bad_arraybox:key[0]",
+                "bad_lru.xs"}),
+}
+
+
+# ------------------------------------------------------------ rule catalog
+def test_every_rule_has_fixture_and_metadata():
+    import repro.analysis.rules  # noqa: F401 -- registers rules
+    assert set(RULES) == set(GOLDEN)
+    for code, r in RULES.items():
+        assert r.code == code
+        assert r.name and r.summary and r.bug, code
+
+
+@pytest.mark.parametrize("code", sorted(GOLDEN))
+def test_fixture_golden_findings(code):
+    path, expected = GOLDEN[code]
+    findings = analyze_paths([str(path)], select=[code], root=str(REPO))
+    assert {f.key for f in findings} == expected
+    for f in findings:
+        assert f.rule == code
+        assert f.line > 0 and f.message
+
+
+@pytest.mark.parametrize("code", sorted(GOLDEN))
+def test_fixtures_do_not_cross_trigger(code):
+    """A fixture seeds only its own rule's findings (no collateral)."""
+    path, _ = GOLDEN[code]
+    findings = analyze_paths([str(path)], root=str(REPO))
+    assert {f.rule for f in findings} == {code}
+
+
+def test_shipped_tree_is_clean():
+    """The acceptance bar: the analyzer exits clean on the real tree."""
+    findings = analyze_paths(
+        [str(REPO / "src"), str(REPO / "tests"), str(REPO / "benchmarks")],
+        root=str(REPO))
+    assert findings == []
+
+
+# ------------------------------------------------------------- suppression
+def test_inline_suppression_silences_finding():
+    path = FIX / "rpr001" / "src" / "repro" / "fixture_suppressed.py"
+    findings = analyze_paths([str(path)], root=str(REPO))
+    assert findings == []
+
+
+def test_suppression_is_code_scoped(tmp_path):
+    src = ("from dataclasses import dataclass\n"
+           "@dataclass(frozen=True)\n"
+           "class Thing:\n"
+           "    ghost: int = 0  # sentinel: ignore[RPR999]\n")
+    p = tmp_path / "src" / "repro" / "mod.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(src)
+    findings = analyze_paths([str(p)], root=str(tmp_path))
+    assert [f.rule for f in findings] == ["RPR001"]  # wrong code: not hit
+
+
+def test_bare_suppression_silences_all_codes():
+    src = ("from dataclasses import dataclass\n"
+           "@dataclass(frozen=True)\n"
+           "class Thing:\n"
+           "    ghost: int = 0  # sentinel: ignore\n")
+    parsed = FileContext.parse("<mem>", "src/repro/mod.py", source=src)
+    assert parsed.suppressions == {4: set()}
+
+
+def test_syntax_error_reported_as_rpr000(tmp_path):
+    p = tmp_path / "broken.py"
+    p.write_text("def nope(:\n")
+    findings = analyze_paths([str(p)], root=str(tmp_path))
+    assert [f.rule for f in findings] == ["RPR000"]
+
+
+# ---------------------------------------------------------------- baseline
+def test_baseline_split_and_staleness(tmp_path):
+    path, _ = GOLDEN["RPR005"]
+    findings = analyze_paths([str(path)], select=["RPR005"],
+                             root=str(REPO))
+    bl = Baseline.from_findings(findings)
+    f = tmp_path / "bl.json"
+    bl.save(str(f))
+    loaded = Baseline.load(str(f))
+    new, baselined, stale = loaded.split(findings)
+    assert new == [] and len(baselined) == len(findings) and stale == []
+    # drop one finding -> its entry is stale
+    new, baselined, stale = loaded.split(findings[:-1])
+    assert len(stale) == 1
+
+
+def test_baseline_survives_line_shifts(tmp_path):
+    """Baseline ids are line-free: an unrelated edit keeps the match."""
+    src = FIX / "rpr003_fake_des_jax.py"
+    shifted = tmp_path / "rpr003_fake_des_jax.py"
+    shifted.write_text("# pad\n# pad\n" + src.read_text())
+    base = analyze_paths([str(src)], root=str(REPO))
+    moved = analyze_paths([str(shifted)], root=str(tmp_path))
+    assert base and moved
+    assert base[0].line != moved[0].line
+    assert base[0].key == moved[0].key
+
+
+# --------------------------------------------------------------------- CLI
+def test_cli_seeded_violation_fails(monkeypatch, capsys):
+    monkeypatch.chdir(REPO)
+    rc = sentinel_main(["tests/sentinel_fixtures/rpr003_fake_des_jax.py",
+                        "--no-baseline"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "RPR003" in out
+
+
+def test_cli_clean_file_passes(tmp_path, monkeypatch, capsys):
+    p = tmp_path / "ok.py"
+    p.write_text("x = 1\n")
+    monkeypatch.chdir(tmp_path)
+    assert sentinel_main(["ok.py"]) == 0
+
+
+def test_cli_write_baseline_roundtrip(tmp_path, monkeypatch, capsys):
+    fixture = (FIX / "rpr004_fake_kernels.py").read_text()
+    p = tmp_path / "fake_kernels.py"
+    p.write_text(fixture)
+    monkeypatch.chdir(tmp_path)
+    bl = "bl.json"
+    assert sentinel_main(["fake_kernels.py"]) == 1
+    assert sentinel_main(["fake_kernels.py", "--write-baseline",
+                          "--baseline", bl]) == 0
+    # grandfathered: same findings now pass...
+    assert sentinel_main(["fake_kernels.py", "--baseline", bl]) == 0
+    # ...but --no-baseline still shows them
+    assert sentinel_main(["fake_kernels.py", "--baseline", bl,
+                          "--no-baseline"]) == 1
+    # fixing the file leaves stale entries -> fail until they are removed
+    p.write_text("x = 1\n")
+    assert sentinel_main(["fake_kernels.py", "--baseline", bl]) == 1
+
+
+def test_cli_json_output(monkeypatch, capsys):
+    monkeypatch.chdir(REPO)
+    rc = sentinel_main(["tests/sentinel_fixtures/rpr005_solver_gate.py",
+                        "--json", "--no-baseline"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert {f["rule"] for f in payload["findings"]} == {"RPR005"}
+
+
+def test_cli_rejects_unknown_rule(monkeypatch):
+    monkeypatch.chdir(REPO)
+    with pytest.raises(SystemExit):
+        sentinel_main(["src", "--select", "RPR999"])
+
+
+# ------------------------------------------------------- CI baseline guard
+def _write_baseline(path, entries):
+    path.write_text(json.dumps({"version": 1, "findings": entries}))
+
+
+def test_guard_empty_baseline_ok(tmp_path, capsys):
+    f = tmp_path / "bl.json"
+    _write_baseline(f, [])
+    assert guard_main(["--baseline", str(f)]) == 0
+
+
+def test_guard_missing_baseline_ok(tmp_path):
+    assert guard_main(["--baseline", str(tmp_path / "absent.json")]) == 0
+
+
+def test_guard_fails_when_baseline_grows(tmp_path, capsys):
+    f = tmp_path / "bl.json"
+    _write_baseline(f, [{"rule": "RPR001", "path": "src/x.py",
+                         "key": "Spec.ghost"}])
+    assert guard_main(["--baseline", str(f)]) == 1
+    out = capsys.readouterr().out
+    assert "MAX_BASELINE_ENTRIES" in out or "budget" in out
+    # raising the pinned budget (the in-PR escape hatch) passes it
+    assert guard_main(["--baseline", str(f), "--max-entries", "1"]) == 0
+
+
+def test_guard_fails_on_duplicates(tmp_path):
+    e = {"rule": "RPR001", "path": "src/x.py", "key": "Spec.ghost"}
+    f = tmp_path / "bl.json"
+    _write_baseline(f, [e, dict(e)])
+    assert guard_main(["--baseline", str(f), "--max-entries", "2"]) == 1
+
+
+def test_guard_fails_on_stale_entry(tmp_path, monkeypatch):
+    clean = tmp_path / "ok.py"
+    clean.write_text("x = 1\n")
+    f = tmp_path / "bl.json"
+    _write_baseline(f, [{"rule": "RPR001", "path": "gone.py",
+                         "key": "Spec.ghost"}])
+    monkeypatch.chdir(tmp_path)
+    assert guard_main(["--baseline", str(f), "--max-entries", "1",
+                       "--paths", "ok.py"]) == 1
+
+
+def test_shipped_baseline_is_empty_and_guarded():
+    """The repo ships a zero-entry baseline and the guard agrees."""
+    bl = Baseline.load(str(REPO / "sentinel_baseline.json"))
+    assert bl.entries == []
+    cwd = os.getcwd()
+    os.chdir(REPO)
+    try:
+        assert guard_main(["--baseline", "sentinel_baseline.json"]) == 0
+    finally:
+        os.chdir(cwd)
