@@ -53,6 +53,7 @@ SUITE_TOL: dict[str, dict[str, float]] = {
     "ga": {"wall": 4.0},
     "robust": {"wall": 4.0},
     "chaos": {"wall": 4.0},
+    "steering": {"wall": 4.0},
 }
 
 # rows that MUST exist in both the committed baseline and the fresh run:
@@ -64,6 +65,9 @@ REQUIRED_ROWS: dict[str, tuple[str, ...]] = {
     # chaos/traces pins the zero-ledger-violation invariant: losing the
     # row (or the suite) must fail the gate, not silently skip it
     "chaos": ("chaos/suite_wall", "chaos/traces"),
+    # steering/policy pins controller-beats-both-trivial-policies (its
+    # violations metric gates at the committed zero baseline)
+    "steering": ("steering/suite_wall", "steering/policy"),
 }
 
 

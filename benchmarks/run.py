@@ -32,7 +32,8 @@ sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
 SUITES = ("tab1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-          "fleet", "kernels", "des", "ga", "robust", "chaos", "roofline")
+          "fleet", "kernels", "des", "ga", "robust", "chaos", "steering",
+          "roofline")
 
 
 def _span_delta(before: dict, after: dict) -> dict:
@@ -70,7 +71,7 @@ def main() -> None:
                             fig7_rates, fig8_seqlen, fig9_ports,
                             fig10_realloc, fig11_exectime, fleet_bench,
                             ga_bench, kernels_bench, robust_bench,
-                            roofline, tab1_workloads)
+                            roofline, steering_bench, tab1_workloads)
     from benchmarks.common import OUT_DIR, save_json
     from repro.obs import TRACER
 
@@ -83,7 +84,8 @@ def main() -> None:
                "fig11": fig11_exectime, "fleet": fleet_bench,
                "kernels": kernels_bench, "des": des_bench,
                "ga": ga_bench, "robust": robust_bench,
-               "chaos": chaos_bench, "roofline": roofline}
+               "chaos": chaos_bench, "steering": steering_bench,
+               "roofline": roofline}
 
     print("name,us_per_call,derived")
     lines = ["name,us_per_call,derived"]

@@ -1,0 +1,193 @@
+"""DELTA-Pilot steering suite: the telemetry-driven controller against the
+two trivial policies it must dominate.
+
+One tenant runs a phase-shifting workload (PP-heavy pretrain `A`, DP-heavy
+finetune `B`) on a 4-pod fleet: a long stretch of `A`, a short `B` flap
+that reverts before any sane controller should react, then a real switch
+to `B`.  Three steering policies pay for that timeline in *extra seconds*
+against an oracle that always holds the perfect topology for free:
+
+  never       keep the admission-time topology forever -- zero rewiring
+              delay, but every second of `B` runs at the incumbent's
+              makespan inflation (``dwell x inflation``);
+  always      replan on every phase marker with zero detection latency --
+              zero inflation, but the flap alone costs two full rewires
+              and the real switch a third (``sum of reconfig delays``);
+  controller  the real `ControlPlane` on the synthesized telemetry stream:
+              hysteresis swallows the flap, the real switch is confirmed,
+              priced with the *measured* dwell and replanned only because
+              it clears the FastReChain break-even.
+
+``steering/policy`` pins the ordering as a gateable quality metric:
+``violations`` is 0 only if the controller beats BOTH trivial policies
+and every replan it issued cleared ``dwell x inflation > delay`` (the
+regression gate fails on any fresh violation against the committed zero
+baseline).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, save_json
+from repro.core.des import DESProblem, simulate
+from repro.core.ga import GAOptions
+from repro.core.schedule import build_comm_dag
+from repro.core.traffic import JobSpec
+from repro.fleet import (ControllerConfig, ControlPlane, FleetPlanner,
+                         FleetSpec, JobArrival, PlanCache, TrafficChange,
+                         synthesize_telemetry)
+
+NIC = 100.0
+RECONFIG_S = 0.5               # per-circuit rewiring delay (OCS-scale)
+FLAP_T0, FLAP_ITERS = 100.0, 2
+SWITCH_T0 = 300.0
+
+
+def _ga_opts(full: bool, smoke: bool) -> GAOptions:
+    gens = 40 if full else (10 if smoke else 20)
+    return GAOptions(seed=0, pop_size=32 if full else 16,
+                     max_generations=gens, patience=10**9, time_limit=1e9)
+
+
+def _phase_job(mb: int, d_model: int, params: float) -> JobSpec:
+    """Same placement footprint, different traffic shape -- the legal
+    domain of a TrafficChange."""
+    return JobSpec(name="t", tp=2, pp=4, dp=2, num_microbatches=mb,
+                   micro_tokens=4096, d_model=d_model,
+                   stage_params=(params,) * 4, gpus_per_pod_per_replica=4)
+
+
+JOB_A = _phase_job(8, 4096, 0.2e9)      # pretrain: PP-heavy
+JOB_B = _phase_job(2, 1024, 3e9)        # finetune: DP-heavy
+
+
+def _planner(opts: GAOptions, cache: PlanCache) -> FleetPlanner:
+    fleet = FleetSpec(num_pods=4, ports_per_pod=8, nic_gbps=NIC)
+    return FleetPlanner(fleet, ga_options=opts, cache=cache, seed=0,
+                        reconfig_s_per_circuit=RECONFIG_S)
+
+
+def _controller_session(opts: GAOptions, cache: PlanCache,
+                        iters_b: int) -> dict:
+    """Drive the real ControlPlane through the scenario; returns the
+    applied steer decisions plus the timeline facts every policy's
+    accounting shares (inflation, segment durations, stream end)."""
+    pl = _planner(opts, cache)
+    pl.handle(JobArrival(name="t", job=JOB_A))
+    x0 = pl.tenants["t"].plan.x.copy()
+    dag_a = build_comm_dag(JOB_A, NIC)
+    dag_b = build_comm_dag(JOB_B, NIC)
+    cp = ControlPlane(pl, ControllerConfig(
+        cadence_s=2.0, confirm_ticks=2, cooldown_s=0.0,
+        drift_threshold=0.05, drift_tau_s=5.0),
+        phase_book={"t": {"A": JOB_A, "B": JOB_B}})
+
+    def drive(dag, phase, t0, iterations):
+        events = synthesize_telemetry(dag, x0, tenant="t", phase=phase,
+                                      t0=t0, iterations=iterations)
+        for ev in events:
+            cp.observe(ev)
+        return max(float(e.t) + float(getattr(e, "dt", 0.0))
+                   for e in events)
+
+    drive(dag_a, "A", 0.0, 20)                       # on-plan stretch
+    flap_end = drive(dag_b, "B", FLAP_T0, FLAP_ITERS)  # flap...
+    drive(dag_a, "A", flap_end, 20)                  # ...reverts
+    t_end = drive(dag_b, "B", SWITCH_T0, iters_b)    # the real switch
+    applied = [d for d in cp.decisions if "decision" in d]
+    # exact-DES ground truth for the incumbent on phase B (= ms_keep)
+    ms_keep = simulate(DESProblem(dag_b), x0.astype(np.float64)).makespan
+    return {"planner": pl, "cp": cp, "applied": applied, "x0": x0,
+            "flap_s": flap_end - FLAP_T0, "t_end": t_end,
+            "ms_keep": ms_keep}
+
+
+def _always_extra(opts: GAOptions, cache: PlanCache) -> tuple[float, int]:
+    """Prescient always-replan: rewire on every phase marker (flap in,
+    flap out, real switch) with zero detection latency and zero
+    inflation; its cost is purely the sum of rewiring delays."""
+    pl = _planner(opts, cache)
+    pl.handle(JobArrival(name="t", job=JOB_A))
+    extra, replans = 0.0, 0
+    for job in (JOB_B, JOB_A, JOB_B):
+        # force the break-even to always choose replan: infinite dwell
+        # makes any nonzero inflation dominate the rewiring delay
+        pl.set_dwell_estimate("t", 1e12)
+        rec = pl.handle(TrafficChange(name="t", job=job, steered=True))
+        dec = rec["decision"]
+        if dec["option"] == "replan":
+            extra += dec["delay_s"]
+            replans += 1
+    return extra, replans
+
+
+def run(full: bool = False) -> list[Row]:
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    opts = _ga_opts(full, smoke)
+    iters_b = 30 if smoke else 60
+    cache = PlanCache()          # shared: all policies price the same plans
+    rows: list[Row] = []
+    t_suite = time.time()
+
+    t0 = time.time()
+    sess = _controller_session(opts, cache, iters_b)
+    ctl_wall = time.time() - t0
+    applied = sess["applied"]
+    steers = len(applied)
+    dec = applied[0]["decision"] if applied else {}
+    infl = float(dec.get("inflation", 0.0))
+    if not infl:                 # controller never steered: reconstruct
+        ms_new = sess["planner"].tenants["t"].plan.makespan
+        infl = max(sess["ms_keep"] / ms_new - 1.0, 0.0)
+    detect_s = (applied[0]["t"] - SWITCH_T0) if applied else \
+        (sess["t_end"] - SWITCH_T0)
+    b_real_s = sess["t_end"] - SWITCH_T0
+
+    # extra seconds vs the free-perfect-topology oracle, per policy
+    never_extra = infl * (sess["flap_s"] + b_real_s)
+    t0 = time.time()
+    always_extra, always_replans = _always_extra(opts, cache)
+    always_wall = time.time() - t0
+    ctl_extra = infl * (sess["flap_s"] + detect_s) + \
+        float(dec.get("delay_s", 0.0))
+
+    # gate-able invariants: the controller must beat both trivial
+    # policies, steer exactly once (the flap never reaches the planner),
+    # and every replan must clear the break-even it was priced with
+    violations = 0
+    violations += int(steers != 1)
+    violations += int(not (ctl_extra < never_extra))
+    violations += int(not (ctl_extra < always_extra))
+    for d in applied:
+        dd = d["decision"]
+        if dd["option"] == "replan" and not (
+                dd["dwell_s"] * dd["inflation"] > dd["delay_s"]):
+            violations += 1
+
+    rows.append(Row(
+        "steering/controller", ctl_wall * 1e6,
+        f"makespan={ctl_extra:.6f};steers={steers};"
+        f"detect_s={detect_s:.2f};delay_s={dec.get('delay_s', 0.0):.4f};"
+        f"dwell_s={dec.get('dwell_s', 0.0):.1f};inflation={infl:.6f}"))
+    rows.append(Row(
+        "steering/never", 0.0,
+        f"makespan={never_extra:.6f};inflation={infl:.6f};"
+        f"b_seconds={sess['flap_s'] + b_real_s:.1f}"))
+    rows.append(Row(
+        "steering/always", always_wall * 1e6,
+        f"makespan={always_extra:.6f};replans={always_replans}"))
+    rows.append(Row(
+        "steering/policy", 0.0,
+        f"violations={violations};controller={ctl_extra:.4f};"
+        f"never={never_extra:.4f};always={always_extra:.4f}"))
+    wall = time.time() - t_suite
+    rows.append(Row("steering/suite_wall", wall * 1e6,
+                    f"seconds={wall:.2f};iters_b={iters_b}"))
+    save_json("steering_bench", {
+        "rows": [{"name": r.name, "us_per_call": r.us_per_call,
+                  "derived": r.derived} for r in rows],
+        "seconds": wall, "violations": violations})
+    return rows

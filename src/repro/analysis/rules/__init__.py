@@ -10,8 +10,10 @@ Catalog (one rule per documented historical bug class):
   RPR006  jit-host-sync             live hazard on the PR-5 jit seams
   RPR007  jit-impurity              live hazard since PR-6 obs tracing
   RPR008  cache-key-hygiene         PR-5 CompiledDES bucket keys
+  RPR009  deprecated-facade-call    the PR-9 plan() API unification
 """
-from repro.analysis.rules import (cachekey, dtype, fields, jit, mutation,
-                                  solver)
+from repro.analysis.rules import (cachekey, dtype, facade, fields, jit,
+                                  mutation, solver)
 
-__all__ = ["cachekey", "dtype", "fields", "jit", "mutation", "solver"]
+__all__ = ["cachekey", "dtype", "facade", "fields", "jit", "mutation",
+           "solver"]

@@ -1,0 +1,112 @@
+"""RPR009: in-tree calls to the deprecated planner facades.
+
+History: PR 9 collapsed the six-way facade sprawl (`optimize`,
+`optimize_ensemble`, `optimize_failsafe`, `optimize_resilient`,
+`fleet_optimize`) into the single typed entry point
+``plan(PlanRequest(...))`` in ``repro.core.api``.  The old names remain
+as bit-identical shims so downstream callers keep working, but *in-tree*
+code growing new calls to them re-forks the API surface the redesign
+just unified -- every new mode would again need five signatures kept in
+sync.
+
+The rule flags calls to the facade names inside ``repro.*`` modules
+(``repro.core.api`` itself excepted: it hosts the shims) whenever the
+name is traceable to ``repro.core.api`` -- a ``from repro.core.api
+import optimize`` binding, or an attribute call through an alias of the
+module (``from repro.core import api; api.optimize(...)``).  Local
+functions that merely share a facade's name are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.engine import (FileContext, Finding, call_name,
+                                   iter_functions, rule)
+
+FACADES = {"optimize", "optimize_ensemble", "optimize_failsafe",
+           "optimize_resilient", "fleet_optimize"}
+API_MODULE = "repro.core.api"
+
+
+def _scopes(ctx: FileContext):
+    yield "<module>", ctx.tree
+    for fn in iter_functions(ctx.tree):
+        yield fn.name, fn
+
+
+def _walk_scope(scope) -> Iterable[ast.AST]:
+    """Walk a function/module without descending into nested defs."""
+    stack = list(scope.body) if hasattr(scope, "body") else [scope]
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _facade_bindings(tree: ast.Module) -> tuple[dict[str, str], set[str]]:
+    """(local name -> facade it binds, aliases naming repro.core.api)."""
+    direct: dict[str, str] = {}
+    mod_aliases: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module == API_MODULE:
+                for a in node.names:
+                    if a.name in FACADES:
+                        direct[a.asname or a.name] = a.name
+            elif node.module == "repro.core":
+                for a in node.names:
+                    if a.name == "api":
+                        mod_aliases.add(a.asname or "api")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == API_MODULE:
+                    mod_aliases.add(a.asname or API_MODULE)
+    return direct, mod_aliases
+
+
+@rule(
+    code="RPR009",
+    name="deprecated-facade-call",
+    summary="in-tree call to a deprecated planner facade instead of "
+            "plan(PlanRequest(...))",
+    bug="PR 9: the five optimize_*/fleet_optimize facades were collapsed "
+        "into plan(); new in-tree callers of the shims re-fork the API "
+        "surface the redesign unified",
+)
+def check(ctxs: list[FileContext]) -> Iterable[Finding]:
+    for ctx in ctxs:
+        if not ctx.module.startswith("repro.") or ctx.module == API_MODULE:
+            continue
+        direct, mod_aliases = _facade_bindings(ctx.tree)
+        if not direct and not mod_aliases:
+            continue
+        for scope_name, scope in _scopes(ctx):
+            for node in _walk_scope(scope):
+                if not isinstance(node, ast.Call):
+                    continue
+                facade = _called_facade(node, direct, mod_aliases)
+                if facade is None:
+                    continue
+                yield Finding(
+                    rule="RPR009", path=ctx.path, line=node.lineno,
+                    message=f"call to deprecated facade `{facade}`; build "
+                            f"a PlanRequest and call "
+                            f"`repro.core.api.plan` instead",
+                    key=f"{scope_name}:{facade}")
+
+
+def _called_facade(node: ast.Call, direct: dict[str, str],
+                   mod_aliases: set[str]) -> str | None:
+    if isinstance(node.func, ast.Name):
+        return direct.get(node.func.id)
+    name = call_name(node.func)
+    if "." not in name:
+        return None
+    prefix, attr = name.rsplit(".", 1)
+    if attr in FACADES and prefix in mod_aliases:
+        return attr
+    return None

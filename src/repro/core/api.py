@@ -1,10 +1,18 @@
-"""DELTA facade: one entry point for the six algorithms of Sec. V-A2,
-plus the multi-DAG robust formulation.
+"""DELTA facade: one typed entry point for every planning mode.
 
-    plan = optimize(dag, method="delta-joint", port_min=True)
+    result = plan(PlanRequest(dag=dag, method="delta-joint", port_min=True))
+    robust = plan(PlanRequest(ensemble=DagEnsemble([dagA, dagB]),
+                              objective="max-regret"))
+    fleet = plan(PlanRequest(fleet_requests=[("a", job_a), ("b", job_b)]))
     report = compare(dag)      # all six, ready for the Fig. 6/8 benchmarks
-    robust = optimize_ensemble(DagEnsemble([dagA, dagB]),
-                               objective="max-regret")
+
+`PlanRequest` carries the what (dag | ensemble | fleet_requests, exactly
+one) and the how (method/objective, `FailureModel`, `FleetOptions`,
+nested `GAOptions`/`MILPOptions`/`DESOptions`); `plan` dispatches on
+`request.kind`.  The historical facades (`optimize`,
+`optimize_ensemble`, `optimize_failsafe`, `optimize_resilient`,
+`fleet_optimize`) remain as thin shims that build the equivalent
+`PlanRequest` -- bit-identical results, see README "Migrating to plan()".
 
 Methods:
   prop-alloc | sqrt-alloc | iter-halve    traffic-matrix baselines
@@ -97,11 +105,11 @@ def milp_critical_delta(dag: CommDAG, res: MILPResult) -> float:
     return delta_sum
 
 
-def optimize(dag: CommDAG, method: str = "delta-fast",
-             port_min: bool = False,
-             ga_options: GAOptions | None = None,
-             milp_options: MILPOptions | None = None,
-             ideal_result: DESResult | None = None) -> PlanResult:
+def _plan_dag(dag: CommDAG, method: str = "delta-fast",
+              port_min: bool = False,
+              ga_options: GAOptions | None = None,
+              milp_options: MILPOptions | None = None,
+              ideal_result: DESResult | None = None) -> PlanResult:
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; pick from {METHODS}")
     problem = DESProblem(dag)
@@ -111,10 +119,10 @@ def optimize(dag: CommDAG, method: str = "delta-fast",
     if method == "delta-robust":
         # singleton ensemble: the weighted objective degenerates to the
         # plain makespan, so this IS the delta-fast path (same RNG stream)
-        eres = optimize_ensemble(DagEnsemble.singleton(dag),
-                                 method="delta-robust", objective="weighted",
-                                 refs=np.array([max(ideal.makespan, 1e-12)]),
-                                 ga_options=ga_options)
+        eres = _plan_ensemble(DagEnsemble.singleton(dag),
+                              method="delta-robust", objective="weighted",
+                              refs=np.array([max(ideal.makespan, 1e-12)]),
+                              ga_options=ga_options)
         elapsed = time.time() - t0
         out = _from_des(dag, problem, method, eres.x, elapsed, ideal)
         out.details.update(eres.details)
@@ -208,7 +216,7 @@ def _from_des(dag: CommDAG, problem: DESProblem, method: str, x: np.ndarray,
 def compare(dag: CommDAG, methods=METHODS[:6], **kw) -> dict[str, PlanResult]:
     problem = DESProblem(dag)
     ideal = _ideal(problem)
-    return {m: optimize(dag, m, ideal_result=ideal, **kw) for m in methods}
+    return {m: _plan_dag(dag, m, ideal_result=ideal, **kw) for m in methods}
 
 
 # ------------------------------------------------------------- DELTA-Robust
@@ -248,12 +256,12 @@ def evaluate_on_ensemble(ensemble: DagEnsemble, x: np.ndarray) -> np.ndarray:
                      for m in ensemble.members])
 
 
-def optimize_ensemble(ensemble: DagEnsemble, method: str = "delta-robust",
-                      objective: str = "max-regret",
-                      refs: np.ndarray | None = None,
-                      ga_options: GAOptions | None = None,
-                      milp_options: MILPOptions | None = None
-                      ) -> EnsemblePlanResult:
+def _plan_ensemble(ensemble: DagEnsemble, method: str = "delta-robust",
+                   objective: str = "max-regret",
+                   refs: np.ndarray | None = None,
+                   ga_options: GAOptions | None = None,
+                   milp_options: MILPOptions | None = None
+                   ) -> EnsemblePlanResult:
     """DELTA-Robust entry point: one port allocation for a set of DAGs.
 
     `refs` define regret (makespan / ref per member); when omitted they
@@ -310,12 +318,12 @@ def optimize_ensemble(ensemble: DagEnsemble, method: str = "delta-robust",
         feasible=feasible, details=details)
 
 
-def optimize_failsafe(dag: CommDAG,
-                      scenarios: list[np.ndarray] | None = None,
-                      num_planes: int = 4, k: int = 1,
-                      objective: str = "worst",
-                      ga_options: GAOptions | None = None,
-                      ideal_result: DESResult | None = None) -> PlanResult:
+def _plan_failsafe(dag: CommDAG,
+                   scenarios: list[np.ndarray] | None = None,
+                   num_planes: int = 4, k: int = 1,
+                   objective: str = "worst",
+                   ga_options: GAOptions | None = None,
+                   ideal_result: DESResult | None = None) -> PlanResult:
     """DELTA-Failsafe entry point: one topology whose makespan holds up
     across fabric-degradation scenarios (capacity masks; default: every
     k-of-num_planes plane loss per pod pair).  Reported under healthy
@@ -337,13 +345,13 @@ def optimize_failsafe(dag: CommDAG,
     return out
 
 
-def optimize_resilient(dag: CommDAG, *, budget_s: float | None = None,
-                       retries: int = 1,
-                       ga_options: GAOptions | None = None,
-                       milp_options: MILPOptions | None = None,
-                       current_x: np.ndarray | None = None,
-                       mask: np.ndarray | None = None,
-                       ideal_result: DESResult | None = None) -> PlanResult:
+def _plan_resilient(dag: CommDAG, *, budget_s: float | None = None,
+                    retries: int = 1,
+                    ga_options: GAOptions | None = None,
+                    milp_options: MILPOptions | None = None,
+                    current_x: np.ndarray | None = None,
+                    mask: np.ndarray | None = None,
+                    ideal_result: DESResult | None = None) -> PlanResult:
     """Budgeted MILP solve with the full fallback chain (MILP -> GA ->
     masked current plan): always returns a plan, with `degraded` and the
     producing `fallback_stage` in `details` when the MILP did not make
@@ -365,11 +373,11 @@ def optimize_resilient(dag: CommDAG, *, budget_s: float | None = None,
     return out
 
 
-def fleet_optimize(requests, num_pods: int | None = None,
-                   ports_per_pod: int | None = None,
-                   nic_gbps: float = 400.0,
-                   ga_options=None, nct_threshold: float = 1.005,
-                   seed: int = 0):
+def _plan_fleet(requests, num_pods: int | None = None,
+                ports_per_pod: int | None = None,
+                nic_gbps: float = 400.0,
+                ga_options=None, nct_threshold: float = 1.005,
+                seed: int = 0):
     """Multi-tenant entry point (paper Sec. VI): admit every request into a
     shared-pod fleet, donate port-minimized savings, waterfill the surplus
     across bottlenecked tenants, and return the FleetPlanner for inspection.
@@ -404,3 +412,213 @@ def fleet_optimize(requests, num_pods: int | None = None,
         ga_options=ga_options, nct_threshold=nct_threshold, seed=seed)
     planner.process(events)
     return planner, planner.report()
+
+
+# -------------------------------------------------------- unified entry
+@dataclass
+class FailureModel:
+    """How `plan` should handle fabric failures.
+
+    Default (``resilient=False``): DELTA-Failsafe -- optimize one topology
+    against degradation `scenarios` (capacity masks; when None, every
+    `k`-of-`num_planes` plane loss per pod pair), aggregated by
+    `objective` ("worst" | "mean").
+
+    ``resilient=True``: budgeted MILP with the full fallback chain
+    (MILP -> GA -> masked `current_x`); `budget_s`/`retries` bound the
+    solve, `mask` degrades capacities during it.
+    """
+
+    scenarios: list[np.ndarray] | None = None
+    num_planes: int = 4
+    k: int = 1
+    objective: str = "worst"
+    resilient: bool = False
+    budget_s: float | None = None
+    retries: int = 1
+    current_x: np.ndarray | None = None
+    mask: np.ndarray | None = None
+
+
+@dataclass
+class FleetOptions:
+    """Fleet sizing + admission knobs for `plan(kind="fleet")`."""
+
+    num_pods: int | None = None
+    ports_per_pod: int | None = None
+    nic_gbps: float = 400.0
+    nct_threshold: float = 1.005
+    seed: int = 0
+
+
+@dataclass
+class FleetPlanResult:
+    """`plan` result for a fleet request: the live planner + its report."""
+
+    planner: object
+    report: dict
+
+    def __iter__(self):
+        # unpacks like the historical (planner, report) tuple
+        return iter((self.planner, self.report))
+
+
+@dataclass
+class PlanRequest:
+    """One typed request for every planning mode.
+
+    Exactly one of `dag` / `ensemble` / `fleet_requests` must be set;
+    `kind` is derived from which one is.  A `dag` request with a
+    `FailureModel` routes to the failsafe path (or the resilient one when
+    ``failure.resilient``).  `method` / `objective` default per kind
+    ("delta-fast" for a dag, "delta-robust" / "max-regret" for an
+    ensemble).  `des_options` is a convenience overlay: when set it is
+    copied into ``ga_options.des_options`` (without mutating the caller's
+    options object).
+    """
+
+    dag: CommDAG | None = None
+    ensemble: DagEnsemble | None = None
+    fleet_requests: list | tuple | None = None
+    method: str | None = None
+    objective: str | None = None
+    port_min: bool = False
+    refs: np.ndarray | None = None
+    failure: FailureModel | None = None
+    fleet: FleetOptions | None = None
+    ga_options: GAOptions | None = None
+    milp_options: MILPOptions | None = None
+    des_options: object | None = None
+    ideal_result: DESResult | None = None
+
+    @property
+    def kind(self) -> str:
+        given = [k for k, v in (("dag", self.dag),
+                                ("ensemble", self.ensemble),
+                                ("fleet", self.fleet_requests))
+                 if v is not None]
+        if len(given) != 1:
+            raise ValueError(
+                "PlanRequest needs exactly one of dag | ensemble | "
+                f"fleet_requests, got {given or 'none'}")
+        if given[0] == "dag" and self.failure is not None:
+            return "resilient" if self.failure.resilient else "failsafe"
+        return given[0]
+
+
+def plan(request: PlanRequest):
+    """THE planner entry point: dispatch a `PlanRequest` by `kind`.
+
+    Returns `PlanResult` (dag / failsafe / resilient),
+    `EnsemblePlanResult` (ensemble) or `FleetPlanResult` (fleet) -- the
+    same objects, bit-identical, that the legacy facades produced.
+    """
+    kind = request.kind
+    ga = request.ga_options
+    if request.des_options is not None:
+        ga = dataclasses.replace(ga or GAOptions(),
+                                 des_options=request.des_options)
+    if kind == "dag":
+        return _plan_dag(request.dag, method=request.method or "delta-fast",
+                         port_min=request.port_min, ga_options=ga,
+                         milp_options=request.milp_options,
+                         ideal_result=request.ideal_result)
+    if kind == "ensemble":
+        return _plan_ensemble(request.ensemble,
+                              method=request.method or "delta-robust",
+                              objective=request.objective or "max-regret",
+                              refs=request.refs, ga_options=ga,
+                              milp_options=request.milp_options)
+    if kind == "failsafe":
+        f = request.failure
+        return _plan_failsafe(request.dag, scenarios=f.scenarios,
+                              num_planes=f.num_planes, k=f.k,
+                              objective=f.objective, ga_options=ga,
+                              ideal_result=request.ideal_result)
+    if kind == "resilient":
+        f = request.failure
+        return _plan_resilient(request.dag, budget_s=f.budget_s,
+                               retries=f.retries, ga_options=ga,
+                               milp_options=request.milp_options,
+                               current_x=f.current_x, mask=f.mask,
+                               ideal_result=request.ideal_result)
+    # kind == "fleet"
+    fo = request.fleet or FleetOptions()
+    planner, report = _plan_fleet(
+        request.fleet_requests, num_pods=fo.num_pods,
+        ports_per_pod=fo.ports_per_pod, nic_gbps=fo.nic_gbps,
+        ga_options=ga, nct_threshold=fo.nct_threshold, seed=fo.seed)
+    return FleetPlanResult(planner=planner, report=report)
+
+
+# ------------------------------------------------- deprecated facades
+# Thin shims over `plan` (bit-identical; regression-tested).  New code
+# should build a `PlanRequest` -- the sentinel rule RPR009 flags in-tree
+# calls to these names.
+def optimize(dag: CommDAG, method: str = "delta-fast",
+             port_min: bool = False,
+             ga_options: GAOptions | None = None,
+             milp_options: MILPOptions | None = None,
+             ideal_result: DESResult | None = None) -> PlanResult:
+    """Deprecated: use ``plan(PlanRequest(dag=..., method=...))``."""
+    return plan(PlanRequest(dag=dag, method=method, port_min=port_min,
+                            ga_options=ga_options, milp_options=milp_options,
+                            ideal_result=ideal_result))
+
+
+def optimize_ensemble(ensemble: DagEnsemble, method: str = "delta-robust",
+                      objective: str = "max-regret",
+                      refs: np.ndarray | None = None,
+                      ga_options: GAOptions | None = None,
+                      milp_options: MILPOptions | None = None
+                      ) -> EnsemblePlanResult:
+    """Deprecated: use ``plan(PlanRequest(ensemble=..., objective=...))``."""
+    return plan(PlanRequest(ensemble=ensemble, method=method,
+                            objective=objective, refs=refs,
+                            ga_options=ga_options,
+                            milp_options=milp_options))
+
+
+def optimize_failsafe(dag: CommDAG,
+                      scenarios: list[np.ndarray] | None = None,
+                      num_planes: int = 4, k: int = 1,
+                      objective: str = "worst",
+                      ga_options: GAOptions | None = None,
+                      ideal_result: DESResult | None = None) -> PlanResult:
+    """Deprecated: use ``plan(PlanRequest(dag=..., failure=FailureModel(...)))``."""
+    return plan(PlanRequest(
+        dag=dag, ga_options=ga_options, ideal_result=ideal_result,
+        failure=FailureModel(scenarios=scenarios, num_planes=num_planes,
+                             k=k, objective=objective)))
+
+
+def optimize_resilient(dag: CommDAG, *, budget_s: float | None = None,
+                       retries: int = 1,
+                       ga_options: GAOptions | None = None,
+                       milp_options: MILPOptions | None = None,
+                       current_x: np.ndarray | None = None,
+                       mask: np.ndarray | None = None,
+                       ideal_result: DESResult | None = None) -> PlanResult:
+    """Deprecated: use ``plan(PlanRequest(dag=...,
+    failure=FailureModel(resilient=True, ...)))``."""
+    return plan(PlanRequest(
+        dag=dag, ga_options=ga_options, milp_options=milp_options,
+        ideal_result=ideal_result,
+        failure=FailureModel(resilient=True, budget_s=budget_s,
+                             retries=retries, current_x=current_x,
+                             mask=mask)))
+
+
+def fleet_optimize(requests, num_pods: int | None = None,
+                   ports_per_pod: int | None = None,
+                   nic_gbps: float = 400.0,
+                   ga_options=None, nct_threshold: float = 1.005,
+                   seed: int = 0):
+    """Deprecated: use ``plan(PlanRequest(fleet_requests=...,
+    fleet=FleetOptions(...)))``."""
+    res = plan(PlanRequest(
+        fleet_requests=list(requests), ga_options=ga_options,
+        fleet=FleetOptions(num_pods=num_pods, ports_per_pod=ports_per_pod,
+                           nic_gbps=nic_gbps, nct_threshold=nct_threshold,
+                           seed=seed)))
+    return res.planner, res.report

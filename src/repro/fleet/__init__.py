@@ -1,29 +1,41 @@
-"""Multi-tenant fleet planner: port ledger, admission, surplus reallocation
-and the event-driven replanning loop (paper Sec. VI as a long-lived
-service).  Entry point: `repro.core.api.fleet_optimize` or `FleetPlanner`.
+"""Multi-tenant fleet planner: port ledger, admission, surplus reallocation,
+the event-driven replanning loop (paper Sec. VI as a long-lived service)
+and the telemetry-driven control plane that steers it.  Entry point:
+`repro.core.api.plan` (kind="fleet") or `FleetPlanner` + `ControlPlane`.
 """
 from repro.fleet.admission import (AdmissionController, AdmissionError,
                                    FleetSpec, Tenant, shrink_to_limits)
+from repro.fleet.control import ControllerConfig, ControlPlane
+from repro.fleet.events import (EVENT_KINDS, EVENTS_VERSION, FAULT_EVENTS,
+                                TELEMETRY_EVENTS, JobArrival, JobDeparture,
+                                LinkFailure, LinkRecovery, PhaseTransition,
+                                PlaneFailure, PlaneRecovery, PortFailure,
+                                PortRecovery, TelemetrySample, TrafficChange,
+                                event_kind, rebuild_event, serialize_event)
 from repro.fleet.faults import (FabricHealth, FaultInjector,
                                 step_failure_trace)
 from repro.fleet.ledger import LedgerError, PortLedger, TenantAccount
-from repro.fleet.loop import (FAULT_EVENTS, FleetPlanner, JobArrival,
-                              JobDeparture, LinkFailure, LinkRecovery,
-                              PlaneFailure, PlaneRecovery, PortFailure,
-                              PortRecovery, TrafficChange, arrivals,
-                              fault_events_from_trace)
+from repro.fleet.loop import FleetPlanner, arrivals, fault_events_from_trace
 from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
 from repro.fleet.realloc import (ReallocResult, candidate_boosts,
-                                 port_demand, reallocate, waterfill_grants)
+                                 circuit_changes, port_demand, reallocate,
+                                 waterfill_grants)
+from repro.fleet.telemetry import (DEFAULT_DWELL_S, DriftEstimator,
+                                   DwellEstimator, synthesize_telemetry,
+                                   traffic_drift)
 
 __all__ = [
     "AdmissionController", "AdmissionError", "FleetSpec", "Tenant",
-    "shrink_to_limits", "FabricHealth", "FaultInjector",
+    "shrink_to_limits", "ControllerConfig", "ControlPlane",
+    "EVENT_KINDS", "EVENTS_VERSION", "FAULT_EVENTS", "TELEMETRY_EVENTS",
+    "JobArrival", "JobDeparture", "LinkFailure", "LinkRecovery",
+    "PhaseTransition", "PlaneFailure", "PlaneRecovery", "PortFailure",
+    "PortRecovery", "TelemetrySample", "TrafficChange", "event_kind",
+    "rebuild_event", "serialize_event", "FabricHealth", "FaultInjector",
     "step_failure_trace", "LedgerError", "PortLedger", "TenantAccount",
-    "FAULT_EVENTS", "FleetPlanner", "JobArrival", "JobDeparture",
-    "LinkFailure", "LinkRecovery", "PlaneFailure", "PlaneRecovery",
-    "PortFailure", "PortRecovery", "TrafficChange", "arrivals",
-    "fault_events_from_trace", "CachedPlan", "PlanCache", "dag_signature",
-    "ReallocResult", "candidate_boosts", "port_demand", "reallocate",
-    "waterfill_grants",
+    "FleetPlanner", "arrivals", "fault_events_from_trace", "CachedPlan",
+    "PlanCache", "dag_signature", "ReallocResult", "candidate_boosts",
+    "circuit_changes", "port_demand", "reallocate", "waterfill_grants",
+    "DEFAULT_DWELL_S", "DriftEstimator", "DwellEstimator",
+    "synthesize_telemetry", "traffic_drift",
 ]

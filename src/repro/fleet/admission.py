@@ -29,7 +29,8 @@ from repro.core.traffic import JobSpec
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
 from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
 from repro.fleet.realloc import (_candidate_genomes, _genome_view,
-                                 _greedy_fill, _scatter)
+                                 _greedy_fill, _scatter, circuit_changes)
+from repro.fleet.telemetry import DEFAULT_DWELL_S
 from repro.obs import get_counter, get_logger, span
 
 INF = float("inf")
@@ -43,6 +44,8 @@ _ROBUST_DEGRADED = get_counter(
     "infeasible member references)")
 _REPAIRS = get_counter("fleet_repairs_total",
                        "fabric repair decisions, by chosen option")
+_STEERS = get_counter("fleet_steer_decisions_total",
+                      "priced phase-change decisions, by chosen option")
 
 
 @dataclass(frozen=True)
@@ -361,14 +364,26 @@ class AdmissionController:
     def repair(self, tenant: Tenant, mask: np.ndarray, *,
                rng: np.random.Generator | None = None,
                num_random: int = 8,
-               dwell_s: float = 600.0,
+               dwell_s: float = DEFAULT_DWELL_S,
                reconfig_s_per_circuit: float = 0.01,
                replan_threshold: float = 1.2) -> dict:
         """Price and apply one repair decision for a tenant under a fabric
         capacity `mask` (its local (P, P) availability factor).
 
-        Three options compete on `cost = reconfiguration delay + dwell x
-        relative makespan inflation`:
+        Three options compete on the FastReChain-style price
+
+            cost = delay + dwell_s * max(ms / ms_healthy - 1, 0)
+
+        where `delay` is the option's reconfiguration delay (changed
+        circuits x `reconfig_s_per_circuit`, zero for keep), `ms` its
+        exact masked-DES makespan, and `ms_healthy` the incumbent
+        topology's healthy makespan -- i.e. seconds of rewiring downtime
+        now, plus the makespan inflation *relative to the healthy
+        incumbent* (clamped at zero) paid on every iteration for the
+        remaining phase dwell.  `dwell_s` defaults to the
+        `DEFAULT_DWELL_S` prior; the fleet loop passes its per-tenant
+        telemetry estimate (`FleetPlanner.dwell_for`).  An infeasible
+        (partitioned) option prices at infinity:
 
           keep     run the incumbent topology through the degraded fabric
                    (zero delay, possibly large inflation -- or inf on a
@@ -452,7 +467,7 @@ class AdmissionController:
             best = int(np.argmin(score))
             x_rw = _scatter(G[best], eu, ev, P) + rem
             cert = simulate(problem, x_rw.astype(np.float64) * mask)
-            delay = _circuit_changes(x_rw, x0) * reconfig_s_per_circuit
+            delay = circuit_changes(x_rw, x0) * reconfig_s_per_circuit
             options.append(("rewire", x_rw, cert.makespan, delay,
                             price(cert.makespan, delay)))
 
@@ -488,7 +503,7 @@ class AdmissionController:
                 x_fs = shrink_to_limits(x_fs, limits)
                 ms_fs = simulate(
                     problem, x_fs.astype(np.float64) * mask).makespan
-            delay = _circuit_changes(x_fs, x0) * reconfig_s_per_circuit
+            delay = circuit_changes(x_fs, x0) * reconfig_s_per_circuit
             options.append(("replan", x_fs, ms_fs, delay,
                             price(ms_fs, delay)))
 
@@ -504,9 +519,88 @@ class AdmissionController:
         return {"tenant": tenant.name, "option": name_w,
                 "ms_healthy": ms_healthy, "makespan": res.makespan,
                 "delay_s": delay_w, "cost_s": cost_w,
-                "changed_circuits": int(_circuit_changes(x_w, x0)),
+                "changed_circuits": int(circuit_changes(x_w, x0)),
                 "options": {n: {"makespan": m, "delay_s": d, "cost_s": c}
                             for n, _x, m, d, c in options}}
+
+    # --------------------------------------------------------- phase change
+    def change(self, tenant: Tenant, x_incumbent: np.ndarray, *,
+               dwell_s: float, reconfig_s_per_circuit: float,
+               mask: np.ndarray | None = None) -> dict:
+        """Price and apply one steered phase change: `tenant` is the NEW
+        tenant (its DAG already rebuilt for the arriving phase) and
+        `x_incumbent` the topology committed for the previous phase.
+
+        Two options compete on the same break-even as `repair`, priced
+        against the best known plan for the new phase (`ms_new`):
+
+          keep     run the new phase through the incumbent topology --
+                   zero delay, `dwell_s * max(ms_keep / ms_new - 1, 0)`
+                   expected seconds lost to inflation over the estimated
+                   remaining dwell;
+          replan   rewire to the new phase's cache-amortized DELTA-Fast
+                   plan -- inflation-free but pays `changed_circuits x
+                   reconfig_s_per_circuit` of rewiring delay now.
+
+        Replan wins only if `dwell_s x inflation > delay` (strictly: ties
+        keep the incumbent, a free hysteresis).  The winner is certified
+        with the exact (masked, when `mask` is given) numpy DES,
+        committed to `tenant.plan`/`base_plan` and the ledger.
+        """
+        problem = DESProblem(tenant.dag)
+        P = len(tenant.pods)
+        ideal = simulate(problem, np.zeros((P, P)), ideal=True)
+
+        def msim(x):
+            xe = np.asarray(x, dtype=np.float64)
+            return simulate(problem, xe * mask if mask is not None else xe)
+
+        x0 = np.asarray(x_incumbent, dtype=np.int64)
+        keep_res = msim(x0)
+        with span("fleet.change", tenant=tenant.name) as sp:
+            plan_new, hit = self.single_plan(tenant.dag, tenant.port_min)
+            sp.set(cache_hit=bool(hit))
+        _PLANS.inc(path="steer", cache="hit" if hit else "miss")
+        x_new = np.asarray(plan_new.x, dtype=np.int64)
+        # the cached plan solved against admission-time limits; the ledger
+        # may have seized ports since (cf. repair's failsafe clamp)
+        limits = gather(self.ledger.limits(tenant.name), tenant.pods)
+        if (x_new.sum(axis=1) > limits).any():
+            x_new = shrink_to_limits(x_new, limits)
+        new_res = msim(x_new)
+        ms_new, ms_keep = new_res.makespan, keep_res.makespan
+        delay = circuit_changes(x_new, x0) * reconfig_s_per_circuit
+        if not np.isfinite(ms_keep):
+            inflation, cost_keep = INF, INF
+        elif np.isfinite(ms_new) and ms_new > 0:
+            inflation = max(ms_keep / ms_new - 1.0, 0.0)
+            cost_keep = dwell_s * inflation
+        else:
+            inflation, cost_keep = 0.0, 0.0
+        cost_replan = delay if np.isfinite(ms_new) else INF
+        if cost_replan < cost_keep:
+            chosen, res, x_w = "replan", new_res, x_new
+        else:
+            chosen, res, x_w = "keep", keep_res, x0
+        nct = res.comm_time / ideal.comm_time \
+            if ideal.comm_time > 0 else INF
+        tenant.plan = CachedPlan(
+            x=np.asarray(x_w, dtype=np.int64).copy(),
+            makespan=res.makespan, comm_time=res.comm_time, nct=nct,
+            ideal_comm_time=ideal.comm_time,
+            details={"steered": True, "option": chosen, "cache_hit": hit})
+        tenant.base_plan = tenant.plan.copy()
+        self.ledger.commit(tenant.name,
+                           tenant.fleet_usage(self.fleet.num_pods))
+        _STEERS.inc(option=chosen)
+        return {"tenant": tenant.name, "option": chosen,
+                "dwell_s": float(dwell_s), "ms_keep": ms_keep,
+                "ms_replan": ms_new, "inflation": float(inflation),
+                "delay_s": float(delay),
+                "cost_keep_s": float(cost_keep),
+                "cost_replan_s": float(cost_replan),
+                "changed_circuits": int(circuit_changes(x_w, x0)),
+                "cache_hit": bool(hit), "masked": mask is not None}
 
     def replan_reduced(self, tenant: Tenant) -> dict:
         """Rebuild the tenant's local view under its CURRENT ledger limits
@@ -580,8 +674,3 @@ def shrink_to_limits(x: np.ndarray, limits: np.ndarray) -> np.ndarray:
         x[q, p] -= 1
     return x
 
-
-def _circuit_changes(x_new: np.ndarray, x_old: np.ndarray) -> int:
-    """Circuits the OCS must tear down or set up to move between plans."""
-    d = np.abs(np.asarray(x_new, np.int64) - np.asarray(x_old, np.int64))
-    return int(np.triu(d, k=1).sum())

@@ -16,19 +16,30 @@ checked after every event.
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.ga import GAOptions, ROBUST_OBJECTIVES
-from repro.core.traffic import JobSpec
 from repro.fleet.admission import (AdmissionController, AdmissionError,
                                    FleetSpec, Tenant)
+# the event schema lives in repro.fleet.events (single serialize/rebuild
+# path); re-exported here so existing `from repro.fleet.loop import ...`
+# call sites keep working
+from repro.fleet.events import (FAULT_EVENTS, FleetEvent, JobArrival,
+                                JobDeparture, LinkFailure, LinkRecovery,
+                                PlaneFailure, PlaneRecovery, PortFailure,
+                                PortRecovery, TrafficChange)
 from repro.fleet.faults import FabricHealth
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
 from repro.fleet.plancache import PlanCache
 from repro.fleet.realloc import port_demand, reallocate, waterfill_grants
+from repro.fleet.telemetry import DEFAULT_DWELL_S
 from repro.obs import REGISTRY, FleetJournal, get_counter, get_gauge, span
+
+__all__ = ["FAULT_EVENTS", "FleetEvent", "FleetPlanner", "JobArrival",
+           "JobDeparture", "LinkFailure", "LinkRecovery", "PlaneFailure",
+           "PlaneRecovery", "PortFailure", "PortRecovery", "TrafficChange",
+           "arrivals", "fault_events_from_trace"]
 
 _EVENTS = get_counter("fleet_events_total",
                       "fleet events handled, by kind and outcome")
@@ -40,75 +51,6 @@ _SNAPSHOTS = get_counter("fleet_snapshots_total",
 
 
 # ------------------------------------------------------------------- events
-@dataclass(frozen=True)
-class JobArrival:
-    name: str
-    job: JobSpec
-    reverse_stages: bool = False
-    port_min: bool = False
-    donate_surplus: bool | None = None   # default: == port_min
-    base_pod: int | None = None
-
-
-@dataclass(frozen=True)
-class JobDeparture:
-    name: str
-
-
-@dataclass(frozen=True)
-class TrafficChange:
-    """Replace a tenant's JobSpec in place (same placement footprint)."""
-    name: str
-    job: JobSpec
-
-
-@dataclass(frozen=True)
-class LinkFailure:
-    """A pod pair loses `fraction` of its circuit capacity (OCS plane
-    segment or fiber bundle serving that pair)."""
-    pair: tuple[int, int]
-    fraction: float = 1.0
-
-
-@dataclass(frozen=True)
-class LinkRecovery:
-    pair: tuple[int, int]
-
-
-@dataclass(frozen=True)
-class PortFailure:
-    """`count` physical OCS ports on `pod` go dark (ledger-visible)."""
-    pod: int
-    count: int = 1
-
-
-@dataclass(frozen=True)
-class PortRecovery:
-    pod: int
-    count: int = 1
-
-
-@dataclass(frozen=True)
-class PlaneFailure:
-    """A whole OCS plane goes dark: a uniform 1/num_planes capacity
-    haircut on every pod pair (also what staggered reconfiguration of a
-    parallel-plane fabric looks like)."""
-    plane: int
-
-
-@dataclass(frozen=True)
-class PlaneRecovery:
-    plane: int
-
-
-FleetEvent = (JobArrival | JobDeparture | TrafficChange | LinkFailure
-              | LinkRecovery | PortFailure | PortRecovery | PlaneFailure
-              | PlaneRecovery)
-
-FAULT_EVENTS = (LinkFailure, LinkRecovery, PortFailure, PortRecovery,
-                PlaneFailure, PlaneRecovery)
-
-
 def fault_events_from_trace(trace: list[dict]) -> list[FleetEvent]:
     """Shared-trace-format dicts (`repro.fleet.faults.FaultInjector`) ->
     live fleet fault events, in trace order (step_failure entries are
@@ -153,7 +95,7 @@ class FleetPlanner:
                  seed: int = 0,
                  journal: FleetJournal | None = None,
                  num_planes: int = 4,
-                 dwell_s: float = 600.0,
+                 dwell_s: float = DEFAULT_DWELL_S,
                  reconfig_s_per_circuit: float = 0.01,
                  replan_threshold: float = 1.2,
                  snapshot_every: int = 0):
@@ -184,9 +126,13 @@ class FleetPlanner:
         self.rng = np.random.default_rng(seed)
         self.realloc_batches = 0        # batched JaxDES calls issued
         self.realloc_candidates = 0     # topologies evaluated inside them
-        # fabric failure state + repair-pricing knobs (DELTA-Failsafe)
+        # fabric failure state + repair-pricing knobs (DELTA-Failsafe).
+        # `dwell_s` is the phase-dwell PRIOR (DEFAULT_DWELL_S): every
+        # priced decision asks `dwell_for(name)`, which prefers the
+        # per-tenant estimate a ControlPlane keeps current from telemetry
         self.health = FabricHealth(fleet.num_pods, num_planes)
         self.dwell_s = float(dwell_s)
+        self.dwell_estimates: dict[str, float] = {}
         self.reconfig_s_per_circuit = float(reconfig_s_per_circuit)
         self.replan_threshold = float(replan_threshold)
         self.snapshot_every = int(snapshot_every)
@@ -200,6 +146,15 @@ class FleetPlanner:
         # snapshot, so two planners in one process never pollute each
         # other's compile-cache hit rate
         self._obs_scope = REGISTRY.scope()
+
+    # ---------------------------------------------------------------- dwell
+    def dwell_for(self, name: str) -> float:
+        """Expected remaining phase dwell for a tenant: the telemetry
+        estimate when a control plane maintains one, else the prior."""
+        return float(self.dwell_estimates.get(name, self.dwell_s))
+
+    def set_dwell_estimate(self, name: str, dwell_s: float) -> None:
+        self.dwell_estimates[name] = float(dwell_s)
 
     # -------------------------------------------------------------- events
     def handle(self, event: FleetEvent) -> dict:
@@ -309,7 +264,24 @@ class FleetPlanner:
             dag=self.admission.build_dag(ev.name, ev.job, tenant.pods,
                                          tenant.reverse_stages),
             dag_history=incumbents)
-        if self.robust_replan:
+        decision = None
+        if ev.steered and tenant.plan is not None:
+            # control-plane change: price keep-vs-replan with the tenant's
+            # estimated remaining dwell (FastReChain break-even) instead
+            # of replanning unconditionally
+            mask = self.health.local_mask(tenant.pods)
+            if float(mask.min(initial=1.0)) >= 1.0 - 1e-12:
+                mask = None
+            decision = self.admission.change(
+                new_tenant, x_incumbent=tenant.plan.x,
+                dwell_s=self.dwell_for(ev.name),
+                reconfig_s_per_circuit=self.reconfig_s_per_circuit,
+                mask=mask)
+            if mask is None:
+                self._degraded.discard(ev.name)
+            else:
+                self._degraded.add(ev.name)
+        elif self.robust_replan:
             self.admission.plan_robust(new_tenant, incumbents,
                                        objective=self.robust_objective)
         else:
@@ -318,13 +290,17 @@ class FleetPlanner:
         donated = self.ledger.donate(ev.name) if tenant.port_min \
             else np.zeros(self.fleet.num_pods, dtype=np.int64)
         details = new_tenant.plan.details
-        return {"event": "traffic_change", "tenant": ev.name,
-                "nct_before": nct_before, "nct": new_tenant.plan.nct,
-                "cache_hit": bool(details.get("cache_hit")),
-                "robust": bool(details.get("robust")),
-                "robust_members": details.get("num_members", 1),
-                "worst_regret": details.get("worst_regret"),
-                "donated_ports": int(donated.sum())}
+        record = {"event": "traffic_change", "tenant": ev.name,
+                  "nct_before": nct_before, "nct": new_tenant.plan.nct,
+                  "cache_hit": bool(details.get("cache_hit")),
+                  "robust": bool(details.get("robust")),
+                  "robust_members": details.get("num_members", 1),
+                  "worst_regret": details.get("worst_regret"),
+                  "donated_ports": int(donated.sum())}
+        if decision is not None:
+            record["steered"] = True
+            record["decision"] = decision
+        return record
 
     # ------------------------------------------------------- fabric faults
     def _on_fabric_change(self, ev, kind: str) -> dict:
@@ -366,7 +342,7 @@ class FleetPlanner:
         decision = self.admission.repair(
             tenant, self.health.local_mask(tenant.pods), rng=self.rng,
             num_random=self.num_random_candidates,
-            dwell_s=self.dwell_s,
+            dwell_s=self.dwell_for(name),
             reconfig_s_per_circuit=self.reconfig_s_per_circuit,
             replan_threshold=self.replan_threshold)
         self.ledger.commit(name, tenant.fleet_usage(self.fleet.num_pods))
@@ -474,7 +450,9 @@ class FleetPlanner:
                 tenant.plan.ideal_comm_time, des=tenant.des(), rng=self.rng,
                 num_random=self.num_random_candidates,
                 base_makespan=tenant.plan.makespan,
-                base_comm_time=tenant.plan.comm_time, mask=mask)
+                base_comm_time=tenant.plan.comm_time, mask=mask,
+                dwell_s=self.dwell_for(tenant.name),
+                reconfig_s_per_circuit=self.reconfig_s_per_circuit)
             self.realloc_batches += res.batch_calls
             self.realloc_candidates += res.num_candidates
             nct_before = tenant.plan.nct
@@ -509,6 +487,7 @@ class FleetPlanner:
             "ledger": self.ledger.snapshot(),
             "health": self.health.snapshot(),
             "rng_state": self.rng.bit_generator.state,
+            "dwell_estimates": dict(self.dwell_estimates),
             "degraded": sorted(self._degraded),
             "shrunk": sorted(self._shrunk),
             "events_handled": self._events_handled,
@@ -547,6 +526,8 @@ class FleetPlanner:
         planner.health = FabricHealth.from_snapshot(snap["health"])
         planner.rng = np.random.default_rng(0)
         planner.rng.bit_generator.state = snap["rng_state"]
+        planner.dwell_estimates = {
+            k: float(v) for k, v in snap.get("dwell_estimates", {}).items()}
         planner._degraded = set(snap.get("degraded", ()))
         planner._shrunk = set(snap.get("shrunk", ()))
         planner._events_handled = int(snap.get("events_handled", 0))

@@ -105,6 +105,12 @@ def waterfill_grants(demands: np.ndarray, supply: np.ndarray,
     return grants.reshape(T, P)
 
 
+def circuit_changes(x_new: np.ndarray, x_old: np.ndarray) -> int:
+    """Circuits the OCS must tear down or set up to move between plans."""
+    d = np.abs(np.asarray(x_new, np.int64) - np.asarray(x_old, np.int64))
+    return int(np.triu(d, k=1).sum())
+
+
 def _edge_arrays(pairs) -> tuple[np.ndarray, np.ndarray]:
     earr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
     return earr[:, 0], earr[:, 1]
@@ -240,7 +246,9 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
                num_random: int = 8,
                base_makespan: float | None = None,
                base_comm_time: float | None = None,
-               mask: np.ndarray | None = None) -> ReallocResult:
+               mask: np.ndarray | None = None,
+               dwell_s: float | None = None,
+               reconfig_s_per_circuit: float = 0.0) -> ReallocResult:
     """Re-optimize one tenant's topology under boosted port limits.
 
     All candidate genomes are scored by a single fused
@@ -253,6 +261,12 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
     batch scoring, base and certification sims -- runs at degraded
     capacity, so grants to a tenant on a damaged fabric are priced against
     the fabric it actually has.
+    With `dwell_s` (the tenant's expected remaining phase dwell) and a
+    positive `reconfig_s_per_circuit`, an improving winner must also clear
+    the reconfiguration break-even: the comm time it saves over the dwell,
+    `dwell_s * (1 - comm_new / comm_base)`, must cover the rewiring delay
+    `changed_circuits * reconfig_s_per_circuit` -- otherwise the boost is
+    declined (`details["rejected"] = "break_even"`).
     """
 
     def _sim(x):
@@ -296,9 +310,26 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
         base_makespan, base_comm_time = base.makespan, base.comm_time
     makespan, comm_time = base_makespan, base_comm_time
     x_best = _scatter(G[best], eu, ev, P) + rem
+    details = {"scores_finite": int(np.isfinite(score).sum())}
     if best != 0:
         cand = _sim(x_best)                       # certify the winner
-        if cand.feasible and cand.comm_time <= base_comm_time * (1 + 1e-9):
+        accept = cand.feasible \
+            and cand.comm_time <= base_comm_time * (1 + 1e-9)
+        if accept and dwell_s is not None and reconfig_s_per_circuit > 0:
+            # break-even gate: rewiring for the boost must pay for itself
+            # within the tenant's expected remaining dwell
+            delay = circuit_changes(x_best, x0) * reconfig_s_per_circuit
+            if np.isfinite(base_comm_time) and base_comm_time > 0 \
+                    and np.isfinite(cand.comm_time):
+                saved = dwell_s * (1.0 - cand.comm_time / base_comm_time)
+            else:
+                saved = INF
+            if saved < delay:
+                accept = False
+                details["rejected"] = "break_even"
+                details["delay_s"] = float(delay)
+                details["saved_s"] = float(saved)
+        if accept:
             makespan, comm_time = cand.makespan, cand.comm_time
         else:
             best = 0                              # never worsen the tenant
@@ -307,4 +338,4 @@ def reallocate(dag: CommDAG, x0: np.ndarray, boosted_limits: np.ndarray,
     return ReallocResult(
         x=x_best, makespan=makespan, comm_time=comm_time,
         nct=nct, improved=best != 0, num_candidates=len(G),
-        details={"scores_finite": int(np.isfinite(score).sum())})
+        details=details)

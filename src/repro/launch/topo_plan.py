@@ -15,7 +15,7 @@ import json
 import numpy as np
 
 from repro.configs import ALL_ARCHS, make_job
-from repro.core.api import METHODS, optimize
+from repro.core.api import METHODS, PlanRequest, plan
 from repro.core.ga import GAOptions
 from repro.core.milp import MILPOptions
 from repro.core.schedule import build_comm_dag
@@ -54,10 +54,11 @@ def main() -> None:
         raise SystemExit(f"unknown methods: {bad}")
     results = {}
     for m in methods:
-        r = optimize(dag, m, port_min=args.port_min,
-                     ga_options=GAOptions(time_limit=args.time_limit / 2),
-                     milp_options=MILPOptions(time_limit=args.time_limit,
-                                              port_min=args.port_min))
+        r = plan(PlanRequest(
+            dag=dag, method=m, port_min=args.port_min,
+            ga_options=GAOptions(time_limit=args.time_limit / 2),
+            milp_options=MILPOptions(time_limit=args.time_limit,
+                                     port_min=args.port_min)))
         results[m] = r
         print(f"[plan] {m:22s} NCT={r.nct:8.4f} "
               f"makespan={r.makespan*1e3:9.2f}ms ports={r.total_ports:4d} "

@@ -28,87 +28,30 @@ __all__ = ["FleetJournal", "serialize_event", "rebuild_event",
            "serialize_dag", "rebuild_dag", "serialize_plan", "rebuild_plan"]
 
 
+# Event (de)serialization is owned by the versioned schema in
+# `repro.fleet.events` -- ONE serialize/rebuild path for planner and
+# control-plane events alike.  These wrappers stay for compatibility
+# (`repro.obs` re-exports them) and import lazily: `repro.obs` must stay
+# importable without pulling the fleet package in.
 def _jobspec_to_dict(job) -> dict:
     return dataclasses.asdict(job)
 
 
 def _jobspec_from_dict(data: dict):
-    from repro.core.traffic import JobSpec
-    kw = dict(data)
-    for f in dataclasses.fields(JobSpec):
-        # JSON round-trips tuples as lists; restore tuple-typed fields
-        if f.name in kw and isinstance(kw[f.name], list):
-            kw[f.name] = tuple(kw[f.name])
-    return JobSpec(**kw)
+    from repro.fleet.events import _jobspec_from_dict as rebuild
+    return rebuild(data)
 
 
 def serialize_event(event) -> dict:
-    """FleetEvent -> JSON-safe dict (kind + reconstruction fields)."""
-    from repro.fleet.loop import (LinkFailure, LinkRecovery, JobArrival,
-                                  JobDeparture, PlaneFailure, PlaneRecovery,
-                                  PortFailure, PortRecovery, TrafficChange)
-    if isinstance(event, JobArrival):
-        return {"kind": "arrival", "name": event.name,
-                "job": _jobspec_to_dict(event.job),
-                "reverse_stages": event.reverse_stages,
-                "port_min": event.port_min,
-                "donate_surplus": event.donate_surplus,
-                "base_pod": event.base_pod}
-    if isinstance(event, JobDeparture):
-        return {"kind": "departure", "name": event.name}
-    if isinstance(event, TrafficChange):
-        return {"kind": "traffic_change", "name": event.name,
-                "job": _jobspec_to_dict(event.job)}
-    if isinstance(event, LinkFailure):
-        return {"kind": "link_failure", "pair": list(event.pair),
-                "fraction": event.fraction}
-    if isinstance(event, LinkRecovery):
-        return {"kind": "link_recovery", "pair": list(event.pair)}
-    if isinstance(event, PortFailure):
-        return {"kind": "port_failure", "pod": event.pod,
-                "count": event.count}
-    if isinstance(event, PortRecovery):
-        return {"kind": "port_recovery", "pod": event.pod,
-                "count": event.count}
-    if isinstance(event, PlaneFailure):
-        return {"kind": "plane_failure", "plane": event.plane}
-    if isinstance(event, PlaneRecovery):
-        return {"kind": "plane_recovery", "plane": event.plane}
-    raise TypeError(f"unknown fleet event {event!r}")
+    """FleetEvent -> JSON-safe dict (see `repro.fleet.events`)."""
+    from repro.fleet.events import serialize_event as ser
+    return ser(event)
 
 
 def rebuild_event(data: dict):
-    """Inverse of `serialize_event`."""
-    from repro.fleet.loop import (LinkFailure, LinkRecovery, JobArrival,
-                                  JobDeparture, PlaneFailure, PlaneRecovery,
-                                  PortFailure, PortRecovery, TrafficChange)
-    kind = data.get("kind")
-    if kind == "arrival":
-        return JobArrival(
-            name=data["name"], job=_jobspec_from_dict(data["job"]),
-            reverse_stages=bool(data.get("reverse_stages", False)),
-            port_min=bool(data.get("port_min", False)),
-            donate_surplus=data.get("donate_surplus"),
-            base_pod=data.get("base_pod"))
-    if kind == "departure":
-        return JobDeparture(name=data["name"])
-    if kind == "traffic_change":
-        return TrafficChange(name=data["name"],
-                             job=_jobspec_from_dict(data["job"]))
-    if kind == "link_failure":
-        return LinkFailure(pair=tuple(data["pair"]),
-                           fraction=float(data.get("fraction", 1.0)))
-    if kind == "link_recovery":
-        return LinkRecovery(pair=tuple(data["pair"]))
-    if kind == "port_failure":
-        return PortFailure(pod=int(data["pod"]), count=int(data["count"]))
-    if kind == "port_recovery":
-        return PortRecovery(pod=int(data["pod"]), count=int(data["count"]))
-    if kind == "plane_failure":
-        return PlaneFailure(plane=int(data["plane"]))
-    if kind == "plane_recovery":
-        return PlaneRecovery(plane=int(data["plane"]))
-    raise ValueError(f"unknown journal event kind {kind!r}")
+    """Inverse of `serialize_event` (see `repro.fleet.events`)."""
+    from repro.fleet.events import rebuild_event as rebuild
+    return rebuild(data)
 
 
 # ------------------------------------------------- snapshot serialization

@@ -28,8 +28,8 @@ import numpy as np
 from repro.core.dag import VIRTUAL, CommDAG
 from repro.core.des import DESProblem, DESResult, simulate
 
-__all__ = ["schedule_timeline", "slack_report", "task_slack",
-           "validate_trace", "write_trace"]
+__all__ = ["interval_rate_matrices", "schedule_timeline", "slack_report",
+           "task_slack", "validate_trace", "write_trace"]
 
 INF = float("inf")
 
@@ -118,6 +118,30 @@ def _link_name(pair: tuple[int, int]) -> str:
     return f"link {pair[0]}->{pair[1]}"
 
 
+def interval_rate_matrices(problem: DESProblem, result: DESResult
+                           ) -> list[tuple[float, float, np.ndarray]]:
+    """Per DES interval, the aggregate (P, P) task-rate matrix (bytes/s).
+
+    Requires a rate trace (``simulate(..., record_rates=True)``).  Entry
+    ``mat[i, j]`` sums the fair-share rates of every task on directed pod
+    pair (i, j) during [t0, t1) -- the ground truth a per-pair telemetry
+    stream observes, and the source `repro.fleet.telemetry` synthesizes
+    samples from.
+    """
+    P = problem.dag.cluster.num_pods
+    pairs = np.asarray(problem.pairs, dtype=np.int64).reshape(-1, 2)
+    active = problem.task_pair >= 0
+    out: list[tuple[float, float, np.ndarray]] = []
+    for t0, t1, rates in result.rate_trace:
+        per_link = np.zeros(len(problem.pairs))
+        np.add.at(per_link, problem.task_pair[active],
+                  np.asarray(rates)[active])
+        mat = np.zeros((P, P))
+        mat[pairs[:, 0], pairs[:, 1]] = per_link
+        out.append((float(t0), float(t1), mat))
+    return out
+
+
 def schedule_timeline(dag: CommDAG, x: np.ndarray,
                       result: DESResult | None = None,
                       time_scale: float = 1e6) -> dict:
@@ -173,13 +197,10 @@ def schedule_timeline(dag: CommDAG, x: np.ndarray,
     B = dag.cluster.nic_bandwidth
     xm = np.asarray(x)
     caps = {pair: float(xm[pair]) * B for pair in problem.pairs}
-    for t0, _t1, rates in result.rate_trace:
-        per_link = np.zeros(len(problem.pairs))
-        np.add.at(per_link, problem.task_pair[problem.task_pair >= 0],
-                  rates[np.nonzero(problem.task_pair >= 0)[0]])
+    for t0, _t1, mat in interval_rate_matrices(problem, result):
         for pair, li in track_of.items():
             cap = caps[pair]
-            util = per_link[li] / cap if cap > 0 else 0.0
+            util = mat[pair] / cap if cap > 0 else 0.0
             events.append({
                 "name": f"util {_link_name(pair)}", "ph": "C", "pid": 0,
                 "tid": li, "ts": t0 * time_scale,

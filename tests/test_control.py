@@ -1,0 +1,398 @@
+"""Control plane: estimators, telemetry synthesis, break-even steering,
+hysteresis, journal replay, and the unified plan() facade identity."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from conftest import gpt7b_job
+from repro.core.api import (FailureModel, FleetOptions, PlanRequest,
+                            fleet_optimize, optimize, optimize_ensemble,
+                            optimize_failsafe, plan)
+from repro.core.dag import DagEnsemble
+from repro.core.des import DESProblem, simulate
+from repro.core.ga import GAOptions
+from repro.core.schedule import build_comm_dag
+from repro.core.traffic import JobSpec
+from repro.fleet import (ControllerConfig, ControlPlane, FleetPlanner,
+                         FleetSpec, JobArrival, PhaseTransition,
+                         TelemetrySample, circuit_changes, reallocate,
+                         synthesize_telemetry, traffic_drift)
+from repro.fleet.events import rebuild_event, serialize_event
+from repro.fleet.telemetry import (DEFAULT_DWELL_S, DriftEstimator,
+                                   DwellEstimator)
+from repro.obs.journal import FleetJournal
+
+GA = GAOptions(pop_size=12, max_generations=25, patience=8, time_limit=5.0,
+               seed=0)
+
+
+def phase_job(mb: int, d_model: int, params: float) -> JobSpec:
+    """Same placement footprint (tp/pp/dp fixed), different traffic shape:
+    high mb + wide activations = PP-heavy, big stages = DP-heavy."""
+    return JobSpec(name="t", tp=2, pp=4, dp=2, num_microbatches=mb,
+                   micro_tokens=4096, d_model=d_model,
+                   stage_params=(params,) * 4, gpus_per_pod_per_replica=4)
+
+
+JOB_A = phase_job(8, 4096, 0.2e9)     # PP-heavy phase
+JOB_B = phase_job(2, 1024, 3e9)       # DP-heavy phase
+
+
+def make_planner(**kw) -> FleetPlanner:
+    kw.setdefault("reconfig_s_per_circuit", 0.05)
+    return FleetPlanner(FleetSpec(num_pods=4, ports_per_pod=8,
+                                  nic_gbps=100.0), ga_options=GA, seed=0,
+                        **kw)
+
+
+def drive(cp: ControlPlane, dag, x, *, phase, t0, iterations, **kw):
+    for ev in synthesize_telemetry(dag, x, tenant="t", phase=phase, t0=t0,
+                                   iterations=iterations, **kw):
+        cp.observe(ev)
+
+
+# ------------------------------------------------------------- estimators
+def test_dwell_estimator_convergence():
+    est = DwellEstimator(prior_s=600.0, alpha=0.3)
+    assert est.estimate() == 600.0
+    t = 0.0
+    for i in range(40):                   # true dwell 50s, phases alternate
+        est.observe_transition(t, "A" if i % 2 == 0 else "B")
+        t += 50.0
+    assert est.estimate() == pytest.approx(50.0)
+    assert est.count == 39
+    # heavy-tail correction: a phase already longer than the EWMA is
+    # expected to keep running
+    last = t - 50.0                       # time of the final transition
+    assert est.expected_remaining(last + 500.0) == pytest.approx(500.0)
+    assert est.expected_remaining(last + 1.0) == pytest.approx(50.0)
+
+
+def test_dwell_estimator_first_observation_replaces_prior():
+    est = DwellEstimator(prior_s=600.0, alpha=0.3)
+    est.observe_transition(0.0, "A")
+    est.observe_transition(30.0, "B")     # first closed dwell: 30s
+    assert est.estimate() == pytest.approx(30.0)   # not 0.7*600 + 0.3*30
+    # a repeated marker for the open phase closes nothing
+    assert est.observe_transition(40.0, "B") is None
+    assert est.count == 1
+
+
+def test_traffic_drift_bounds():
+    a = np.array([[0.0, 2.0], [0.0, 0.0]])
+    b = np.array([[0.0, 0.0], [3.0, 0.0]])
+    assert traffic_drift(a, a) == 0.0
+    assert traffic_drift(a, 10 * a) == 0.0        # shape, not magnitude
+    assert traffic_drift(a, b) == pytest.approx(1.0)
+    assert traffic_drift(np.zeros((2, 2)), a) == 0.0
+
+
+def test_drift_estimator_integrates_windows():
+    planned = np.array([[0.0, 1.0], [0.0, 0.0]])
+    est = DriftEstimator(tau_s=10.0)
+    assert est.drift(planned) == 0.0          # no observations yet
+    for _ in range(20):
+        est.observe(planned, dt=1.0)
+    assert est.drift(planned) == pytest.approx(0.0)
+    # one short rogue window barely moves the dt-weighted integral
+    est.observe(np.array([[0.0, 0.0], [1.0, 0.0]]), dt=0.1)
+    assert est.drift(planned) < 0.05          # raw window TV would be 1.0
+
+
+def test_drift_estimator_shape_converges_to_volume():
+    """Bursty per-window rates (disjoint pair per window) integrate to the
+    iteration's volume shape, so within-phase drift ends near zero."""
+    vol = np.array([[0.0, 3.0], [1.0, 0.0]])
+    w1 = np.array([[0.0, 6.0], [0.0, 0.0]])  # first half: pair (0,1) only
+    w2 = np.array([[0.0, 0.0], [2.0, 0.0]])  # second half: pair (1,0) only
+    est = DriftEstimator(tau_s=50.0)
+    for _ in range(40):
+        est.observe(w1, dt=0.5)
+        est.observe(w2, dt=0.5)
+    assert est.drift(vol) < 0.02
+    # each window alone is maximally off-shape
+    assert traffic_drift(w1, vol) == pytest.approx(0.25)
+
+
+# ----------------------------------------------------- telemetry synthesis
+def test_synthesized_telemetry_conserves_volume(tiny_dag):
+    prob = DESProblem(tiny_dag)
+    P = tiny_dag.cluster.num_pods
+    x = np.full((P, P), 2); np.fill_diagonal(x, 0)
+    events = synthesize_telemetry(tiny_dag, x, tenant="t", phase="A",
+                                  iterations=2)
+    assert isinstance(events[0], PhaseTransition)
+    samples = [e for e in events if isinstance(e, TelemetrySample)]
+    n = len(samples) // 2
+    moved = sum(np.asarray(s.rates) * s.dt for s in samples[:n])
+    vol = tiny_dag.traffic_matrix()
+    np.testing.assert_allclose(moved, vol, rtol=1e-6, atol=1e-6)
+    # queues drain monotonically within an iteration and restart at the
+    # full per-pair volume each iteration
+    q0 = np.asarray(samples[0].queues)
+    np.testing.assert_allclose(q0, vol)
+    totals = [float(np.asarray(s.queues).sum()) for s in samples[:n]]
+    assert all(a >= b - 1e-9 for a, b in zip(totals, totals[1:]))
+    np.testing.assert_allclose(np.asarray(samples[n].queues), vol)
+    del prob
+
+
+def test_synthesized_telemetry_rejects_infeasible(tiny_dag):
+    P = tiny_dag.cluster.num_pods
+    with pytest.raises(ValueError):
+        synthesize_telemetry(tiny_dag, np.zeros((P, P)), tenant="t")
+
+
+def test_telemetry_events_round_trip_json():
+    s = TelemetrySample(t=1.5, tenant="t", dt=0.25,
+                        rates=((0.0, 2.5), (1.0, 0.0)),
+                        queues=((0.0, 9.0), (3.0, 0.0)), phase="A")
+    p = PhaseTransition(t=2.0, tenant="t", phase="B")
+    for ev in (s, p):
+        data = json.loads(json.dumps(serialize_event(ev)))
+        assert data["v"] == 2
+        assert rebuild_event(data) == ev
+
+
+# --------------------------------------------------------------- steering
+@pytest.fixture(scope="module")
+def steered_session():
+    """One full monitored session: admit on phase A, drive phase-A then
+    phase-B telemetry through a journaling controller until it steers."""
+    planner = make_planner(journal=FleetJournal())
+    planner.handle(JobArrival(name="t", job=JOB_A))
+    x0 = planner.tenants["t"].plan.x.copy()
+    # surplus grants are revoked before any event is priced, so the
+    # incumbent the steer competes against is the *base* plan
+    base_x = planner.tenants["t"].base_plan.x.copy()
+    dag_a = build_comm_dag(JOB_A, 100.0)
+    dag_b = build_comm_dag(JOB_B, 100.0)
+    cfg = ControllerConfig(cadence_s=1.0, confirm_ticks=2, cooldown_s=0.0,
+                           drift_threshold=0.05)
+    cp = ControlPlane(planner, cfg, phase_book={"t": {"A": JOB_A,
+                                                      "B": JOB_B}})
+    drive(cp, dag_a, x0, phase="A", t0=0.0, iterations=10)
+    drive(cp, dag_b, x0, phase="B", t0=300.0, iterations=40)
+    return planner, cp, base_x, cfg
+
+
+def test_steered_change_clears_break_even(steered_session):
+    planner, cp, base_x, _ = steered_session
+    applied = [d for d in cp.decisions if "decision" in d]
+    assert applied, "controller never steered"
+    decision = applied[0]["decision"]
+    assert decision["option"] == "replan"
+    # the measured dwell (300s of phase A), not the 600s prior, priced it
+    assert decision["dwell_s"] == pytest.approx(300.0)
+    assert decision["cost_replan_s"] < decision["cost_keep_s"]
+    # certified against the exact DES oracle: keeping the incumbent (base
+    # plan; grants are revoked before pricing) on the new phase's DAG
+    prob = DESProblem(planner.tenants["t"].dag)
+    ms_keep = simulate(prob, np.asarray(base_x, dtype=np.float64)).makespan
+    assert decision["ms_keep"] == pytest.approx(ms_keep)
+    inflation = max(ms_keep / decision["ms_replan"] - 1.0, 0.0)
+    assert decision["inflation"] == pytest.approx(inflation)
+    assert decision["cost_keep_s"] == pytest.approx(
+        decision["dwell_s"] * inflation)
+    delay = decision["changed_circuits"] * planner.reconfig_s_per_circuit
+    assert decision["delay_s"] == pytest.approx(delay)
+    assert decision["dwell_s"] * inflation > delay
+
+
+def test_steered_dwell_estimate_reaches_planner(steered_session):
+    planner, cp, _, _ = steered_session
+    assert planner.dwell_for("t") == pytest.approx(300.0)
+    assert planner.dwell_for("ghost") == DEFAULT_DWELL_S
+    rep = cp.report()
+    assert rep["tenants"]["t"]["planned_phase"] == "B"
+    assert rep["actions"].get("replan", 0) >= 1
+
+
+def test_keep_wins_when_dwell_cannot_amortize():
+    """Same phase shift, but reconfiguration so expensive (and measured
+    dwell so short) that the priced decision keeps the incumbent."""
+    planner = make_planner(reconfig_s_per_circuit=1e4)
+    planner.handle(JobArrival(name="t", job=JOB_A))
+    x0 = planner.tenants["t"].plan.x.copy()
+    base_x = planner.tenants["t"].base_plan.x.copy()
+    dag_a = build_comm_dag(JOB_A, 100.0)
+    dag_b = build_comm_dag(JOB_B, 100.0)
+    cfg = ControllerConfig(cadence_s=1.0, confirm_ticks=2, cooldown_s=0.0,
+                           drift_threshold=0.05)
+    cp = ControlPlane(planner, cfg,
+                      phase_book={"t": {"A": JOB_A, "B": JOB_B}})
+    drive(cp, dag_a, x0, phase="A", t0=0.0, iterations=10)
+    drive(cp, dag_b, x0, phase="B", t0=60.0, iterations=40)
+    applied = [d for d in cp.decisions if "decision" in d]
+    assert applied and applied[0]["decision"]["option"] == "keep"
+    # the incumbent base topology survives (the surplus pass may still
+    # boost the working plan on top of it)
+    assert np.array_equal(planner.tenants["t"].base_plan.x, base_x)
+    assert applied[0]["decision"]["cost_keep_s"] <= \
+        applied[0]["decision"]["cost_replan_s"]
+
+
+def test_hysteresis_short_flap_never_reaches_planner():
+    """A phase marker that reverts within the confirm window must produce
+    zero steered events (and zero replans)."""
+    planner = make_planner()
+    planner.handle(JobArrival(name="t", job=JOB_A))
+    x0 = planner.tenants["t"].plan.x.copy()
+    dag_a = build_comm_dag(JOB_A, 100.0)
+    dag_b = build_comm_dag(JOB_B, 100.0)
+    cfg = ControllerConfig(cadence_s=5.0, confirm_ticks=3, cooldown_s=0.0,
+                           drift_threshold=0.05)
+    cp = ControlPlane(planner, cfg,
+                      phase_book={"t": {"A": JOB_A, "B": JOB_B}})
+    history_before = len(planner.history)
+    drive(cp, dag_a, x0, phase="A", t0=0.0, iterations=10)
+    # flap: one short burst of B (far shorter than 3 x 5s), then back to A
+    drive(cp, dag_b, x0, phase="B", t0=100.0, iterations=2)
+    drive(cp, dag_a, x0, phase="A", t0=104.0, iterations=30)
+    assert len(planner.history) == history_before   # no TrafficChange
+    assert all("decision" not in d for d in cp.decisions)
+    assert cp.report()["tenants"]["t"]["planned_phase"] == "A"
+    assert np.array_equal(planner.tenants["t"].plan.x, x0)
+
+
+def test_hysteresis_noisy_rates_do_not_flap():
+    """Noisy within-phase rates plus a *stale* B marker: drift vs the
+    planned matrix stays put only when B's traffic actually shows up, so
+    noise alone (still phase-A-shaped traffic) must not confirm."""
+    planner = make_planner()
+    planner.handle(JobArrival(name="t", job=JOB_A))
+    x0 = planner.tenants["t"].plan.x.copy()
+    dag_a = build_comm_dag(JOB_A, 100.0)
+    cfg = ControllerConfig(cadence_s=1.0, confirm_ticks=2, cooldown_s=0.0,
+                           drift_threshold=0.05)
+    cp = ControlPlane(planner, cfg,
+                      phase_book={"t": {"A": JOB_A, "B": JOB_B}})
+    drive(cp, dag_a, x0, phase="A", t0=0.0, iterations=5)
+    # the marker claims B but the (noisy) traffic is still phase A
+    cp.observe(PhaseTransition(t=200.0, tenant="t", phase="B"))
+    drive(cp, dag_a, x0, phase=None, t0=200.0, iterations=40, noise=0.3,
+          rng=np.random.default_rng(7))
+    evaluated = [d for d in cp.decisions if d["tenant"] == "t"]
+    assert evaluated, "cadence never fired"
+    assert all("decision" not in d for d in evaluated)
+    assert np.array_equal(planner.tenants["t"].plan.x, x0)
+
+
+def test_cooldown_limits_steer_rate():
+    planner = make_planner()
+    planner.handle(JobArrival(name="t", job=JOB_A))
+    x0 = planner.tenants["t"].plan.x.copy()
+    dag_b = build_comm_dag(JOB_B, 100.0)
+    cfg = ControllerConfig(cadence_s=1.0, confirm_ticks=1, cooldown_s=1e9,
+                           drift_threshold=0.05)
+    cp = ControlPlane(planner, cfg,
+                      phase_book={"t": {"A": JOB_A, "B": JOB_B}})
+    cp.observe(PhaseTransition(t=0.0, tenant="t", phase="A"))
+    cp._last_change["t"] = 0.0          # freshly steered, still cooling
+    drive(cp, dag_b, x0, phase="B", t0=10.0, iterations=40)
+    assert {d["action"] for d in cp.decisions} == {"cooldown"}
+    assert np.array_equal(planner.tenants["t"].plan.x, x0)
+
+
+# ----------------------------------------------------------------- replay
+def test_journal_replay_reproduces_decisions(steered_session, tmp_path):
+    planner, cp, _, cfg = steered_session
+    path = tmp_path / "session.jsonl"
+    with open(path, "w") as f:
+        for entry in planner.journal.entries:
+            json.dump(entry, f, default=str)
+            f.write("\n")
+    fresh = make_planner(journal=FleetJournal())
+    cp2 = ControlPlane.replay(str(path), fresh, config=cfg,
+                              phase_book={"t": {"A": JOB_A, "B": JOB_B}})
+    def strip(decisions):
+        return [{k: v for k, v in d.items() if k != "decision"}
+                for d in decisions]
+    assert strip(cp2.decisions) == strip(cp.decisions)
+    applied = [d["decision"] for d in cp.decisions if "decision" in d]
+    replayed = [d["decision"] for d in cp2.decisions if "decision" in d]
+    assert [d["option"] for d in replayed] == \
+        [d["option"] for d in applied]
+    for a, b in zip(applied, replayed):
+        assert a["cost_keep_s"] == pytest.approx(b["cost_keep_s"])
+        assert a["cost_replan_s"] == pytest.approx(b["cost_replan_s"])
+    np.testing.assert_array_equal(fresh.tenants["t"].plan.x,
+                                  planner.tenants["t"].plan.x)
+    assert fresh.dwell_for("t") == pytest.approx(planner.dwell_for("t"))
+
+
+# --------------------------------------------------- realloc break-even
+def test_realloc_break_even_gate(tiny_dag):
+    """A surplus boost whose rewiring cost exceeds the dwell-weighted
+    saving is rejected (details flag the break-even), and accepted again
+    when the dwell amortizes it."""
+    P = tiny_dag.cluster.num_pods
+    x0 = np.full((P, P), 1); np.fill_diagonal(x0, 0)
+    prob = DESProblem(tiny_dag)
+    ideal = simulate(prob, np.zeros((P, P)), ideal=True)
+    boosted = np.full(P, 8)
+    kw = dict(ideal_comm_time=ideal.comm_time, num_random=4,
+              rng=np.random.default_rng(0))
+    res_free = reallocate(tiny_dag, x0, boosted, **kw)
+    assert res_free.improved          # boost helps when rewiring is free
+    res_gated = reallocate(tiny_dag, x0, boosted, dwell_s=1e-6,
+                           reconfig_s_per_circuit=1e3, **kw)
+    assert not res_gated.improved
+    assert res_gated.details.get("rejected") == "break_even"
+    np.testing.assert_array_equal(res_gated.x, x0)
+    res_long = reallocate(tiny_dag, x0, boosted, dwell_s=1e12,
+                          reconfig_s_per_circuit=1e-9, **kw)
+    assert res_long.improved
+    np.testing.assert_array_equal(res_long.x, res_free.x)
+
+
+# ------------------------------------------------------- plan() facade
+def test_plan_request_kind_validation(tiny_dag):
+    with pytest.raises(ValueError):
+        PlanRequest().kind
+    with pytest.raises(ValueError):
+        PlanRequest(dag=tiny_dag, fleet_requests=[("a", JOB_A)]).kind
+    assert PlanRequest(dag=tiny_dag).kind == "dag"
+    assert PlanRequest(dag=tiny_dag, failure=FailureModel()).kind \
+        == "failsafe"
+    assert PlanRequest(dag=tiny_dag,
+                       failure=FailureModel(resilient=True)).kind \
+        == "resilient"
+    assert PlanRequest(fleet_requests=[("a", JOB_A)]).kind == "fleet"
+
+
+def test_plan_matches_optimize_bit_identical(tiny_dag):
+    legacy = optimize(tiny_dag, "delta-fast", ga_options=GA)
+    unified = plan(PlanRequest(dag=tiny_dag, ga_options=GA))
+    np.testing.assert_array_equal(legacy.x, unified.x)
+    assert legacy.makespan == unified.makespan
+    assert legacy.nct == unified.nct
+    assert legacy.total_ports == unified.total_ports
+
+
+def test_plan_matches_ensemble_and_failsafe_bit_identical(tiny_dag):
+    ens = DagEnsemble([tiny_dag, build_comm_dag(gpt7b_job(4), 400.0)])
+    a = optimize_ensemble(ens, objective="max-regret", ga_options=GA)
+    b = plan(PlanRequest(ensemble=ens, objective="max-regret",
+                         ga_options=GA))
+    np.testing.assert_array_equal(a.x, b.x)
+    np.testing.assert_array_equal(a.makespans, b.makespans)
+    assert a.worst_regret == b.worst_regret
+    fa = optimize_failsafe(tiny_dag, num_planes=2, k=1, ga_options=GA)
+    fb = plan(PlanRequest(dag=tiny_dag, ga_options=GA,
+                          failure=FailureModel(num_planes=2, k=1)))
+    np.testing.assert_array_equal(fa.x, fb.x)
+    assert fa.makespan == fb.makespan
+
+
+def test_plan_matches_fleet_bit_identical():
+    a_planner, a_report = fleet_optimize([("a", JOB_A)], ga_options=GA)
+    res = plan(PlanRequest(fleet_requests=[("a", JOB_A)], ga_options=GA,
+                           fleet=FleetOptions()))
+    b_planner, b_report = res           # FleetPlanResult unpacks
+    np.testing.assert_array_equal(a_planner.tenants["a"].plan.x,
+                                  b_planner.tenants["a"].plan.x)
+    assert a_report["tenants"].keys() == b_report["tenants"].keys()

@@ -37,6 +37,8 @@ GOLDEN = {
                {"bad_param:key[0]", "bad_local:key[0]",
                 "bad_dataclass:key[0]", "bad_arraybox:key[0]",
                 "bad_lru.xs"}),
+    "RPR009": (FIX / "rpr009",
+               {"bad_direct:optimize", "bad_alias:fleet_optimize"}),
 }
 
 
