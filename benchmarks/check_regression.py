@@ -54,6 +54,7 @@ SUITE_TOL: dict[str, dict[str, float]] = {
     "robust": {"wall": 4.0},
     "chaos": {"wall": 4.0},
     "steering": {"wall": 4.0},
+    "planes": {"wall": 4.0},
 }
 
 # rows that MUST exist in both the committed baseline and the fresh run:
@@ -68,6 +69,10 @@ REQUIRED_ROWS: dict[str, tuple[str, ...]] = {
     # steering/policy pins controller-beats-both-trivial-policies (its
     # violations metric gates at the committed zero baseline)
     "steering": ("steering/suite_wall", "steering/policy"),
+    # planes/transition pins the exact-oracle step certification and
+    # planes/midfault pins never-stranded; both gate violations at the
+    # committed zero baseline
+    "planes": ("planes/suite_wall", "planes/transition", "planes/midfault"),
 }
 
 

@@ -1,0 +1,188 @@
+"""DELTA-Planes suite: k-plane decomposition + staggered-rewire metrics.
+
+All rows are seeded and generation-bounded so the emitted quality metrics
+are deterministic and gate-able by benchmarks/check_regression.py; every
+row carries a ``violations`` count that must stay at zero:
+
+  * ``planes/decompose`` -- the two-stage `delta_planes` solve: lane
+    stacks must sum to the topology, respect every per-plane budget, and
+    keep every one-plane-dark state finite (violations counts breaches;
+    worst_dark_regret and makespan gate the quality);
+  * ``planes/transition`` -- a staggered A->B transition: every step's
+    journaled peak inflation must match the masked numpy oracle EXACTLY
+    (bit-equal recomputation from scratch) and the final state must equal
+    plan B;
+  * ``planes/midfault`` -- a `PlaneFailure` lands mid-transition on a
+    not-yet-rewired plane: the scheduler must re-price and land on
+    exactly plan A or plan B (a stranded fleet is a violation);
+  * ``planes/suite_wall`` -- suite wall clock for the regression gate.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, save_json
+from repro.core.cluster import split_port_budgets
+from repro.core.dag import DagEnsemble
+from repro.core.des import DESProblem, simulate
+from repro.core.ga import GAOptions, delta_planes
+from repro.core.schedule import build_comm_dag
+from repro.core.traffic import JobSpec
+from repro.fleet import (FabricHealth, StaggeredTransition, TenantLane,
+                         split_plan)
+
+NUM_PLANES = 4
+
+
+def _job(name: str, mb: int) -> JobSpec:
+    return JobSpec(name=name, tp=2, pp=4, dp=2, num_microbatches=mb,
+                   micro_tokens=4096, d_model=4096,
+                   stage_params=(1.75e9,) * 4, gpus_per_pod_per_replica=4)
+
+
+def _ga_opts(full: bool, smoke: bool) -> GAOptions:
+    gens = 30 if full else (8 if smoke else 15)
+    return GAOptions(seed=0, pop_size=24 if full else 12,
+                     max_generations=gens, patience=10**9, time_limit=1e9)
+
+
+def _plane_usage(plane: np.ndarray) -> np.ndarray:
+    up = np.triu(plane, k=1)
+    return up.sum(axis=0) + up.sum(axis=1)
+
+
+def _decompose_row(full: bool, smoke: bool) -> Row:
+    dag = build_comm_dag(_job("planes", mb=8 if full else 2), 400.0)
+    ens = DagEnsemble.singleton(dag)
+    opts = _ga_opts(full, smoke)
+    t0 = time.time()
+    res = delta_planes(ens, opts, num_planes=NUM_PLANES)
+    dt = time.time() - t0
+    violations = 0
+    if not np.array_equal(res.planes.sum(axis=0), res.x):
+        violations += 1
+    budgets = np.asarray(res.plane_port_limits, dtype=np.int64)
+    for p in range(NUM_PLANES):
+        if (_plane_usage(res.planes[p]) > budgets[p]).any():
+            violations += 1
+    if not np.isfinite(res.dark_makespans).all():
+        violations += 1
+    # the lane genomes are the planes on the union pair list -- a
+    # mismatch means the genome/matrix views diverged
+    eu = np.asarray([e[0] for e in res.edges], dtype=np.int64)
+    ev = np.asarray([e[1] for e in res.edges], dtype=np.int64)
+    for p in range(NUM_PLANES):
+        if not np.array_equal(res.planes[p][eu, ev], res.lane_genomes[p]):
+            violations += 1
+    return Row(
+        "planes/decompose", dt * 1e6,
+        f"makespan={float(res.makespans[0]):.6f};"
+        f"worst_regret={res.worst_dark_regret:.6f};"
+        f"ports={res.total_ports};planes={res.num_planes};"
+        f"generations={res.generations};violations={violations}")
+
+
+def _lane(dag, x_a: np.ndarray, x_b: np.ndarray) -> TenantLane:
+    P = dag.cluster.num_pods
+    budgets = np.asarray(split_port_budgets((64,) * P, NUM_PLANES))
+    return TenantLane(name="a", dag=dag, pods=tuple(range(P)),
+                      planes_a=split_plan(x_a, budgets),
+                      planes_b=split_plan(x_b, budgets))
+
+
+def _plans(dag) -> tuple[np.ndarray, np.ndarray]:
+    """A 4-circuit-per-pair plan A and a shrink-style target B."""
+    P = dag.cluster.num_pods
+    x_a = np.zeros((P, P), dtype=np.int64)
+    for i, j in dag.undirected_pairs():
+        x_a[i, j] = x_a[j, i] = 4
+    x_b = x_a.copy()
+    for i, j in dag.undirected_pairs()[:2]:
+        x_b[i, j] = x_b[j, i] = 2
+    return x_a, x_b
+
+
+def _transition_row(full: bool) -> Row:
+    dag = build_comm_dag(_job("tr", mb=4 if full else 2), 400.0)
+    x_a, x_b = _plans(dag)
+    lane = _lane(dag, x_a, x_b)
+    health = FabricHealth(dag.cluster.num_pods, NUM_PLANES)
+    t0 = time.time()
+    res = StaggeredTransition([lane], health, slo=3.0,
+                              transition_id="bench").run()
+    dt = time.time() - t0
+    violations = 0 if res.committed else 1
+    # certify: every journaled step peak must be the oracle number,
+    # recomputed from scratch, EXACTLY (not approximately)
+    prob = DESProblem(dag)
+    mixed = lane.planes_a.copy()
+    for s in res.steps:
+        x_mid = mixed.sum(axis=0).astype(np.float64)
+        eff = x_mid - mixed[s.plane]
+        eff = np.where((eff <= 0) & (x_mid > 0), x_mid / NUM_PLANES, eff)
+        ref = simulate(prob, x_mid).makespan
+        ms = simulate(prob, eff).makespan
+        if s.peak_inflation != max(ms / ref, 1.0):
+            violations += 1
+        mixed[s.plane] = lane.planes_b[s.plane]
+    final = lane.planes_a.copy()
+    for s in res.steps:
+        final[s.plane] = lane.planes_b[s.plane]
+    if not np.array_equal(final, lane.planes_b):
+        violations += 1
+    return Row(
+        "planes/transition", dt * 1e6,
+        f"steps={len(res.steps)};peak={res.peak_inflation:.6f};"
+        f"delay_s={res.total_delay_s:.4f};"
+        f"outcome={res.status};violations={violations}")
+
+
+def _midfault_row(full: bool) -> Row:
+    dag = build_comm_dag(_job("mf", mb=4 if full else 2), 400.0)
+    x_a, x_b = _plans(dag)
+    lane = _lane(dag, x_a, x_b)
+    health = FabricHealth(dag.cluster.num_pods, NUM_PLANES)
+    tr = StaggeredTransition([lane], health, slo=5.0,
+                             transition_id="bench-mf")
+    t0 = time.time()
+    first = tr.step()
+    health.fail_plane(tr.pending[0])     # a not-yet-rewired plane dies
+    outcome = "committed"
+    while tr.pending:
+        if tr.step() is None:
+            tr.rollback()
+            outcome = "rolled_back"
+            break
+    dt = time.time() - t0
+    violations = 0 if first is not None else 1
+    final = tr.mixed_planes(lane)
+    target = lane.planes_b if outcome == "committed" else lane.planes_a
+    if not np.array_equal(final, target):   # stranded between plans
+        violations += 1
+    if not all(np.isfinite(s.peak_inflation) for s in tr.steps):
+        violations += 1
+    return Row(
+        "planes/midfault", dt * 1e6,
+        f"steps={len(tr.steps)};outcome={outcome};"
+        f"dark={len(health.dark_planes)};violations={violations}")
+
+
+def run(full: bool = False) -> list[Row]:
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    rows: list[Row] = []
+    t_suite = time.time()
+    rows.append(_decompose_row(full, smoke))
+    rows.append(_transition_row(full))
+    rows.append(_midfault_row(full))
+    wall = time.time() - t_suite
+    rows.append(Row(
+        "planes/suite_wall", wall * 1e6,
+        f"seconds={wall:.2f};violations=0"))
+    save_json("planes_bench", {
+        "rows": [{"name": r.name, "us_per_call": r.us_per_call,
+                  "derived": r.derived} for r in rows],
+        "seconds": wall})
+    return rows

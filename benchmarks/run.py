@@ -33,7 +33,7 @@ sys.path.insert(0, ".")
 
 SUITES = ("tab1", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
           "fleet", "kernels", "des", "ga", "robust", "chaos", "steering",
-          "roofline")
+          "planes", "roofline")
 
 
 def _span_delta(before: dict, after: dict) -> dict:
@@ -70,8 +70,9 @@ def main() -> None:
     from benchmarks import (chaos_bench, des_bench, fig6_bandwidth,
                             fig7_rates, fig8_seqlen, fig9_ports,
                             fig10_realloc, fig11_exectime, fleet_bench,
-                            ga_bench, kernels_bench, robust_bench,
-                            roofline, steering_bench, tab1_workloads)
+                            ga_bench, kernels_bench, planes_bench,
+                            robust_bench, roofline, steering_bench,
+                            tab1_workloads)
     from benchmarks.common import OUT_DIR, save_json
     from repro.obs import TRACER
 
@@ -85,7 +86,7 @@ def main() -> None:
                "kernels": kernels_bench, "des": des_bench,
                "ga": ga_bench, "robust": robust_bench,
                "chaos": chaos_bench, "steering": steering_bench,
-               "roofline": roofline}
+               "planes": planes_bench, "roofline": roofline}
 
     print("name,us_per_call,derived")
     lines = ["name,us_per_call,derived"]

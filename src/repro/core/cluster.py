@@ -19,6 +19,28 @@ from typing import Sequence
 GBPS = 1e9 / 8.0  # 1 Gb/s in bytes/s
 
 
+def split_port_budgets(port_limits: Sequence[int],
+                       num_planes: int) -> tuple[tuple[int, ...], ...]:
+    """Split per-pod port budgets across `num_planes` parallel OCS planes.
+
+    Each pod's U_p ports are divided as evenly as possible: every plane
+    gets ``U_p // k`` and the first ``U_p % k`` planes one extra, so the
+    per-plane budgets sum to U_p exactly and differ by at most one.  The
+    deterministic remainder placement (low plane ids first) matters: the
+    fleet's plane book must be bit-identically reconstructible from a
+    journal replay.
+    """
+    k = int(num_planes)
+    if k < 1:
+        raise ValueError(f"num_planes must be >= 1, got {num_planes}")
+    limits = [int(u) for u in port_limits]
+    if any(u < 0 for u in limits):
+        raise ValueError(f"port budgets must be non-negative: {limits}")
+    return tuple(
+        tuple(u // k + (1 if p < u % k else 0) for u in limits)
+        for p in range(k))
+
+
 @dataclass(frozen=True)
 class ClusterSpec:
     """A set of pods with OCS port budgets and per-NIC injection bandwidth.
@@ -65,6 +87,13 @@ class ClusterSpec:
 
     def with_port_limits(self, port_limits: Sequence[int]) -> "ClusterSpec":
         return dataclasses.replace(self, port_limits=tuple(port_limits))
+
+    def plane_port_limits(self, num_planes: int
+                          ) -> tuple[tuple[int, ...], ...]:
+        """Per-plane port budgets for a k-plane fabric (see
+        `split_port_budgets`): k tuples of per-pod budgets summing to
+        `port_limits` elementwise."""
+        return split_port_budgets(self.port_limits, num_planes)
 
 
 @dataclass(frozen=True)

@@ -326,6 +326,13 @@ class DagEnsemble:
     def member(self, name: str) -> CommDAG:
         return self.members[self.names.index(name)]
 
+    def plane_port_limits(self, num_planes: int
+                          ) -> tuple[tuple[int, ...], ...]:
+        """Per-plane port budgets of the shared cluster for a k-plane
+        fabric: k tuples of per-pod budgets summing elementwise to the
+        cluster's `port_limits` (see `ClusterSpec.plane_port_limits`)."""
+        return self.cluster.plane_port_limits(num_planes)
+
     # ------------------------------------------------------------ union views
     def undirected_pairs(self) -> list[tuple[int, int]]:
         """Union of the members' active undirected pod pairs -- the genome /

@@ -655,6 +655,32 @@ class JaxDES:
 
 
 # ------------------------------------------------------------------ ensemble
+def plane_state_genomes(lane_genomes: np.ndarray) -> np.ndarray:
+    """Fabric-state expansion of a k-plane lane decomposition.
+
+    `lane_genomes` is (..., k, E): per-plane circuit counts on the E
+    union pairs, summing (over planes) to the total topology genome.
+    Returns a float (..., k+1, E) stack -- state 0 is the full fabric
+    (lane sum) and state p+1 is plane p dark (total minus lane p).  A
+    pair carried entirely by the dark plane keeps a fractional
+    ``total / k`` trickle instead of zeroing out: circuits are the only
+    route between a pair, so a hard zero would price every single-lane
+    pair as an infinite makespan (the same transient-buffering
+    convention as `repro.core.ga.failure_scenarios`).  These are exactly
+    the states a staggered rewire visits, so the GA's spare-lane fitness
+    and the transition scheduler price the same physics.
+    """
+    lanes = np.asarray(lane_genomes, dtype=np.float64)
+    if lanes.ndim < 2:
+        raise ValueError(f"lane_genomes needs a (k, E) tail, "
+                         f"got shape {lanes.shape}")
+    k = lanes.shape[-2]
+    total = lanes.sum(axis=-2, keepdims=True)           # (..., 1, E)
+    eff = total - lanes                                 # (..., k, E)
+    eff = np.where((eff <= 0) & (total > 0), total / k, eff)
+    return np.concatenate([total, eff], axis=-2)        # (..., k+1, E)
+
+
 def stack_problems(problems: list[DESProblem],
                    pad: PadSpec | None = None) -> DESArrays:
     """Pad member DES problems to one fixed shape and stack them.

@@ -7,16 +7,21 @@ from repro.fleet.admission import (AdmissionController, AdmissionError,
                                    FleetSpec, Tenant, shrink_to_limits)
 from repro.fleet.control import ControllerConfig, ControlPlane
 from repro.fleet.events import (EVENT_KINDS, EVENTS_VERSION, FAULT_EVENTS,
-                                TELEMETRY_EVENTS, JobArrival, JobDeparture,
-                                LinkFailure, LinkRecovery, PhaseTransition,
-                                PlaneFailure, PlaneRecovery, PortFailure,
-                                PortRecovery, TelemetrySample, TrafficChange,
-                                event_kind, rebuild_event, serialize_event)
+                                PLANE_EVENTS, TELEMETRY_EVENTS, JobArrival,
+                                JobDeparture, LinkFailure, LinkRecovery,
+                                PhaseTransition, PlaneFailure, PlaneRecovery,
+                                PlaneRewireStep, PlaneTransitionSummary,
+                                PortFailure, PortRecovery, TelemetrySample,
+                                TrafficChange, event_kind, rebuild_event,
+                                serialize_event)
 from repro.fleet.faults import (FabricHealth, FaultInjector,
                                 step_failure_trace)
 from repro.fleet.ledger import LedgerError, PortLedger, TenantAccount
 from repro.fleet.loop import FleetPlanner, arrivals, fault_events_from_trace
 from repro.fleet.plancache import CachedPlan, PlanCache, dag_signature
+from repro.fleet.planes import (PlaneBook, StaggeredTransition, TenantLane,
+                                TransitionResult, effective_topology,
+                                split_plan)
 from repro.fleet.realloc import (ReallocResult, candidate_boosts,
                                  circuit_changes, port_demand, reallocate,
                                  waterfill_grants)
@@ -27,14 +32,17 @@ from repro.fleet.telemetry import (DEFAULT_DWELL_S, DriftEstimator,
 __all__ = [
     "AdmissionController", "AdmissionError", "FleetSpec", "Tenant",
     "shrink_to_limits", "ControllerConfig", "ControlPlane",
-    "EVENT_KINDS", "EVENTS_VERSION", "FAULT_EVENTS", "TELEMETRY_EVENTS",
-    "JobArrival", "JobDeparture", "LinkFailure", "LinkRecovery",
-    "PhaseTransition", "PlaneFailure", "PlaneRecovery", "PortFailure",
+    "EVENT_KINDS", "EVENTS_VERSION", "FAULT_EVENTS", "PLANE_EVENTS",
+    "TELEMETRY_EVENTS", "JobArrival", "JobDeparture", "LinkFailure",
+    "LinkRecovery", "PhaseTransition", "PlaneFailure", "PlaneRecovery",
+    "PlaneRewireStep", "PlaneTransitionSummary", "PortFailure",
     "PortRecovery", "TelemetrySample", "TrafficChange", "event_kind",
     "rebuild_event", "serialize_event", "FabricHealth", "FaultInjector",
     "step_failure_trace", "LedgerError", "PortLedger", "TenantAccount",
     "FleetPlanner", "arrivals", "fault_events_from_trace", "CachedPlan",
-    "PlanCache", "dag_signature", "ReallocResult", "candidate_boosts",
+    "PlanCache", "dag_signature", "PlaneBook", "StaggeredTransition",
+    "TenantLane", "TransitionResult", "effective_topology", "split_plan",
+    "ReallocResult", "candidate_boosts",
     "circuit_changes", "port_demand", "reallocate", "waterfill_grants",
     "DEFAULT_DWELL_S", "DriftEstimator", "DwellEstimator",
     "synthesize_telemetry", "traffic_drift",

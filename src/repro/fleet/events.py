@@ -15,9 +15,14 @@ every entry.  Version history:
   1  PR-7 journal shapes (arrival/departure/traffic_change + fault events)
   2  adds the control-plane telemetry events (`TelemetrySample`,
      `PhaseTransition`) and the ``steered`` flag on `TrafficChange`
+  3  adds the staggered-reconfiguration plane events (`PlaneRewireStep`,
+     `PlaneTransitionSummary`) -- decision *outputs* journaled under the
+     ``plane_event`` record kind, not replayable inputs, so
+     `ControlPlane.replay` skips them and regenerates identical steps by
+     re-driving the deterministic scheduler
 
 Rebuild is backward compatible: missing fields take their dataclass
-defaults, so v1 journals replay unchanged.
+defaults, so v1/v2 journals replay unchanged.
 """
 from __future__ import annotations
 
@@ -27,14 +32,15 @@ from dataclasses import dataclass
 from repro.core.traffic import JobSpec
 
 __all__ = [
-    "EVENTS_VERSION", "EVENT_KINDS", "FAULT_EVENTS", "TELEMETRY_EVENTS",
-    "FleetEvent", "JobArrival", "JobDeparture", "TrafficChange",
-    "LinkFailure", "LinkRecovery", "PortFailure", "PortRecovery",
-    "PlaneFailure", "PlaneRecovery", "TelemetrySample", "PhaseTransition",
+    "EVENTS_VERSION", "EVENT_KINDS", "FAULT_EVENTS", "PLANE_EVENTS",
+    "TELEMETRY_EVENTS", "FleetEvent", "JobArrival", "JobDeparture",
+    "TrafficChange", "LinkFailure", "LinkRecovery", "PortFailure",
+    "PortRecovery", "PlaneFailure", "PlaneRecovery", "PlaneRewireStep",
+    "PlaneTransitionSummary", "TelemetrySample", "PhaseTransition",
     "serialize_event", "rebuild_event", "event_kind",
 ]
 
-EVENTS_VERSION = 2
+EVENTS_VERSION = 3
 
 
 # ------------------------------------------------------------ fleet events
@@ -106,6 +112,42 @@ class PlaneRecovery:
     plane: int
 
 
+# ------------------------------------------------ staggered-rewire events
+@dataclass(frozen=True)
+class PlaneRewireStep:
+    """One single-plane rewire inside a staggered A->B transition.
+
+    The plane is dark for `delay_s` while its circuits move; the recorded
+    `peak_inflation` is the CERTIFIED (numpy-oracle) worst per-tenant
+    makespan inflation of the intermediate fabric state, the exact number
+    the SLO was checked against.  `direction` is ``forward`` for the
+    planned order and ``rollback`` when the scheduler is un-rewiring an
+    already-done plane to return to plan A."""
+    transition: str                     # transition id (journal-scoped)
+    plane: int
+    seq: int                            # step index within the transition
+    direction: str = "forward"
+    peak_inflation: float = 1.0
+    delay_s: float = 0.0
+    changed_circuits: int = 0
+    tenants: tuple[str, ...] = ()
+
+
+@dataclass(frozen=True)
+class PlaneTransitionSummary:
+    """Terminal record of one staggered transition: either every plane
+    was rewired to plan B (`outcome='committed'`) or the scheduler rolled
+    back to plan A (`outcome='rolled_back'`); the fleet is never left
+    between plans."""
+    transition: str
+    outcome: str
+    steps: int = 0
+    peak_inflation: float = 1.0
+    total_delay_s: float = 0.0
+    tenants: tuple[str, ...] = ()
+    planes: tuple[int, ...] = ()
+
+
 # -------------------------------------------------------- telemetry events
 @dataclass(frozen=True)
 class TelemetrySample:
@@ -136,6 +178,8 @@ FleetEvent = (JobArrival | JobDeparture | TrafficChange | LinkFailure
 FAULT_EVENTS = (LinkFailure, LinkRecovery, PortFailure, PortRecovery,
                 PlaneFailure, PlaneRecovery)
 
+PLANE_EVENTS = (PlaneRewireStep, PlaneTransitionSummary)
+
 TELEMETRY_EVENTS = (TelemetrySample, PhaseTransition)
 
 EVENT_KINDS: dict[str, type] = {
@@ -148,6 +192,8 @@ EVENT_KINDS: dict[str, type] = {
     "port_recovery": PortRecovery,
     "plane_failure": PlaneFailure,
     "plane_recovery": PlaneRecovery,
+    "plane_rewire": PlaneRewireStep,
+    "plane_transition": PlaneTransitionSummary,
     "telemetry": TelemetrySample,
     "phase_transition": PhaseTransition,
 }

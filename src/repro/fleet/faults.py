@@ -93,6 +93,16 @@ class FabricHealth:
                     out.append((i, j))
         return out
 
+    def availability(self) -> float:
+        """Mean per-pair capacity availability in [0, 1] (off-diagonal
+        mean of `mask()`): the one-number fabric health summary the
+        snapshot round-trip property pins."""
+        if self.num_pods < 2:
+            return float(self.plane_factor)
+        m = self.mask()
+        iu, iv = np.triu_indices(self.num_pods, k=1)
+        return float(m[iu, iv].mean())
+
     def affects(self, pods: Iterable[int]) -> bool:
         """Does the current damage touch a tenant spanning `pods`?"""
         if self.dark_planes:
@@ -136,6 +146,10 @@ class FaultInjector:
         self.flap_rate = float(flap_rate)
         self.max_fraction = float(max_fraction)
         self.max_ports = int(max_ports)
+        # planes currently dark *within the generated trace*: a second
+        # plane_failure for an already-dark plane would make its matching
+        # plane_recovery ambiguous, so draws exclude them
+        self._dark: set[int] = set()
 
     def _one(self, step: int) -> list[dict]:
         kinds = list(self.rates)
@@ -143,6 +157,8 @@ class FaultInjector:
         probs /= probs.sum()
         kind = kinds[int(self.rng.choice(len(kinds), p=probs))]
         flap = bool(self.rng.random() < self.flap_rate)
+        if kind == "plane" and len(self._dark) >= self.num_planes:
+            kind = "link"   # every plane is already dark; keep the trace
         if kind == "link":
             i = int(self.rng.integers(self.num_pods))
             j = int(self.rng.integers(self.num_pods - 1))
@@ -158,9 +174,14 @@ class FaultInjector:
                   "pod": pod, "count": count}
             rec = {"kind": "port_recovery", "pod": pod, "count": count}
         else:
-            plane = int(self.rng.integers(self.num_planes))
+            # collision-free draw: uniform over the planes still lit
+            healthy = sorted(set(range(self.num_planes)) - self._dark)
+            plane = int(healthy[int(self.rng.integers(len(healthy)))])
             ev = {"step": step, "kind": "plane_failure", "plane": plane}
             rec = {"kind": "plane_recovery", "plane": plane}
+            self._dark.add(plane)
+            if flap:
+                self._dark.discard(plane)   # its recovery is in the trace
         if flap:
             return [ev, {"step": step + 1, **rec}]
         return [ev]
@@ -168,6 +189,7 @@ class FaultInjector:
     def trace(self, length: int) -> list[dict]:
         """Generate `length` fault events (flap recoveries included)."""
         out: list[dict] = []
+        self._dark = set()   # each trace() restarts from a lit fabric
         step = 0
         while len(out) < length:
             events = self._one(step)

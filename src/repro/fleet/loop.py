@@ -19,6 +19,8 @@ import os
 
 import numpy as np
 
+from repro.core.cluster import split_port_budgets
+from repro.core.des import DESProblem, simulate
 from repro.core.ga import GAOptions, ROBUST_OBJECTIVES
 from repro.fleet.admission import (AdmissionController, AdmissionError,
                                    FleetSpec, Tenant)
@@ -28,8 +30,10 @@ from repro.fleet.admission import (AdmissionController, AdmissionError,
 from repro.fleet.events import (FAULT_EVENTS, FleetEvent, JobArrival,
                                 JobDeparture, LinkFailure, LinkRecovery,
                                 PlaneFailure, PlaneRecovery, PortFailure,
-                                PortRecovery, TrafficChange)
+                                PortRecovery, TrafficChange, serialize_event)
 from repro.fleet.faults import FabricHealth
+from repro.fleet.planes import (PlaneBook, StaggeredTransition, TenantLane,
+                                split_plan)
 from repro.fleet.ledger import LedgerError, PortLedger, gather, scatter
 from repro.fleet.plancache import PlanCache
 from repro.fleet.realloc import port_demand, reallocate, waterfill_grants
@@ -98,7 +102,9 @@ class FleetPlanner:
                  dwell_s: float = DEFAULT_DWELL_S,
                  reconfig_s_per_circuit: float = 0.01,
                  replan_threshold: float = 1.2,
-                 snapshot_every: int = 0):
+                 snapshot_every: int = 0,
+                 plane_slo: float = 3.0,
+                 staggered: bool = True):
         self.fleet = fleet
         self.ledger = PortLedger(fleet.capacity())
         self.cache = cache if cache is not None else PlanCache()
@@ -136,6 +142,18 @@ class FleetPlanner:
         self.reconfig_s_per_circuit = float(reconfig_s_per_circuit)
         self.replan_threshold = float(replan_threshold)
         self.snapshot_every = int(snapshot_every)
+        # DELTA-Planes: per-tenant lane decompositions + staggered rewires.
+        # Topology changes on live tenants (traffic replans, fault repairs,
+        # surplus boosts) apply through a `StaggeredTransition` -- one plane
+        # dark at a time, each step SLO-checked -- instead of an atomic
+        # full-fabric swap.  Unsplittable plans fall back to the atomic
+        # path (pre-planes behavior), recorded per transition
+        self.num_planes = int(num_planes)
+        self.plane_slo = float(plane_slo)
+        self.staggered = bool(staggered) and self.num_planes >= 2
+        self.planes = PlaneBook(self.num_planes)
+        self.transitions: list[dict] = []
+        self._transition_seq = 0
         self._events_handled = 0
         self._degraded: set[str] = set()   # tenants priced under a mask
         self._shrunk: set[str] = set()     # tenants replanned under seizure
@@ -199,6 +217,7 @@ class FleetPlanner:
             if self.auto_realloc:
                 record["realloc"] = self.replan_surplus()
             self.ledger.check()
+            self._sync_planes()
             self.history.append(record)
             _EVENTS.inc(kind=kind, outcome="ok")
             _TENANTS.set(len(self.tenants))
@@ -238,6 +257,7 @@ class FleetPlanner:
         if tenant is None:
             raise LedgerError(f"unknown tenant {ev.name!r}")
         self.admission.depart(tenant)
+        self.planes.pop(ev.name)
         return {"event": "departure", "tenant": ev.name,
                 "pods": list(tenant.pods)}
 
@@ -256,6 +276,8 @@ class FleetPlanner:
         # grants were already revoked in handle(); take donations back too
         self.ledger.withdraw_donation(ev.name)
         nct_before = tenant.plan.nct if tenant.plan else float("inf")
+        x_before = None if tenant.plan is None else \
+            np.asarray(tenant.plan.x, dtype=np.int64).copy()
         incumbents = (tenant.dag_history + [tenant.dag])[
             -self.robust_history:] if self.robust_history > 0 else []
         new_tenant = Tenant(
@@ -287,6 +309,15 @@ class FleetPlanner:
         else:
             self.admission.plan(new_tenant)
         self.tenants[ev.name] = new_tenant
+        transition = None
+        if x_before is not None and new_tenant.plan is not None:
+            transition = self._apply_staggered(
+                {ev.name: (x_before, new_tenant.plan.x)}, "traffic_change")
+            if transition is not None \
+                    and transition["status"] == "rolled_back":
+                # the new topology could not be reached within the SLO:
+                # keep the OLD circuits, priced on the NEW dag
+                self._revert_plan(ev.name, x_before)
         donated = self.ledger.donate(ev.name) if tenant.port_min \
             else np.zeros(self.fleet.num_pods, dtype=np.int64)
         details = new_tenant.plan.details
@@ -300,6 +331,8 @@ class FleetPlanner:
         if decision is not None:
             record["steered"] = True
             record["decision"] = decision
+        if transition is not None:
+            record["transition"] = transition
         return record
 
     # ------------------------------------------------------- fabric faults
@@ -339,6 +372,8 @@ class FleetPlanner:
         """One priced repair decision + ledger commit + degraded-set
         bookkeeping for a single tenant under the current fabric mask."""
         tenant = self.tenants[name]
+        x_before = None if tenant.plan is None else \
+            np.asarray(tenant.plan.x, dtype=np.int64).copy()
         decision = self.admission.repair(
             tenant, self.health.local_mask(tenant.pods), rng=self.rng,
             num_random=self.num_random_candidates,
@@ -350,6 +385,19 @@ class FleetPlanner:
             self._degraded.discard(name)
         else:
             self._degraded.add(name)
+        if x_before is not None \
+                and not np.array_equal(x_before, tenant.plan.x):
+            # a rewire/replan repair moves circuits: stagger it too.  The
+            # engine reads the CURRENT dark planes live, so a repair fired
+            # by a PlaneFailure prices every step against the already-
+            # degraded fabric (doubly-dark intermediate states)
+            transition = self._apply_staggered(
+                {name: (x_before, tenant.plan.x)}, "repair")
+            if transition is not None \
+                    and transition["status"] == "rolled_back":
+                self._revert_plan(name, x_before)
+            if transition is not None:
+                decision["transition"] = transition
         return decision
 
     def _on_port_change(self, ev, kind: str) -> dict:
@@ -390,6 +438,142 @@ class FleetPlanner:
         record["replans"] = replans
         record["failed_ports"] = int(self.ledger.failed.sum())
         return record
+
+    # ------------------------------------------- staggered plane rewires
+    def _tenant_budgets(self, name: str, pods) -> np.ndarray:
+        """Per-plane port budgets for a tenant's local pod window, derived
+        from its CURRENT ledger limits (entitlement + grants - seizures)
+        by the deterministic `split_port_budgets` rule -- a pure function
+        of the event stream, so journal replay reproduces bit-identical
+        lane stacks."""
+        limits = gather(self.ledger.limits(name), pods)
+        return np.asarray(
+            split_port_budgets(tuple(int(u) for u in limits),
+                               self.num_planes), dtype=np.int64)
+
+    def _lane_stack(self, name: str, x: np.ndarray) -> np.ndarray | None:
+        """The tenant's lane stack for topology `x`: the book entry when
+        it already sums to `x`, else a fresh deterministic split (None if
+        `x` does not decompose under the per-plane budgets)."""
+        book = self.planes.get(name)
+        if book is not None and np.array_equal(book.sum(axis=0), x):
+            return book
+        return split_plan(x, self._tenant_budgets(
+            name, self.tenants[name].pods))
+
+    def _apply_staggered(self, movers: dict, reason: str) -> dict | None:
+        """Apply ``{name: (x_old, x_new)}`` topology changes as ONE
+        staggered transition.  Returns the JSON-safe transition record,
+        or None when staggering is off, nothing actually moved, or any
+        mover's plan does not decompose (the caller keeps the atomic
+        swap it already made -- pre-planes behavior).  A ``rolled_back``
+        record means the caller must revert the movers to x_old
+        (`_revert_plan`)."""
+        if not self.staggered:
+            return None
+        movers = {n: (np.asarray(a, dtype=np.int64),
+                      np.asarray(b, dtype=np.int64))
+                  for n, (a, b) in movers.items()
+                  if not np.array_equal(a, b)}
+        if not movers:
+            return None
+        lanes: list[TenantLane] = []
+        assignments: dict[str, np.ndarray] = {}
+        for name in sorted(movers):
+            x_old, x_new = movers[name]
+            tenant = self.tenants[name]
+            planes_a = self._lane_stack(name, x_old)
+            budgets = self._tenant_budgets(name, tenant.pods)
+            planes_b = split_plan(x_new, budgets)
+            if planes_a is None or planes_b is None:
+                return None
+            lanes.append(TenantLane(name=name, dag=tenant.dag,
+                                    pods=tenant.pods, planes_a=planes_a,
+                                    planes_b=planes_b))
+            assignments[name] = planes_b
+        # bystanders suffer every intermediate dark plane too and count
+        # toward the SLO; an unsplittable bystander simply is not priced
+        for name in sorted(set(self.tenants) - set(movers)):
+            tenant = self.tenants[name]
+            if tenant.plan is None:
+                continue
+            planes = self._lane_stack(
+                name, np.asarray(tenant.plan.x, dtype=np.int64))
+            if planes is None:
+                continue
+            lanes.append(TenantLane(name=name, dag=tenant.dag,
+                                    pods=tenant.pods, planes_a=planes,
+                                    planes_b=planes))
+        tid = f"t{self._transition_seq}"
+        self._transition_seq += 1
+        engine = StaggeredTransition(
+            lanes, self.health, slo=self.plane_slo,
+            reconfig_s_per_circuit=self.reconfig_s_per_circuit,
+            transition_id=tid)
+        result = engine.run()
+        # plane events are decision OUTPUTS: journaled for audit under
+        # their own record kind (EVENTS_VERSION 3), skipped by replay --
+        # the replaying planner regenerates identical steps by re-driving
+        # this deterministic scheduler
+        for step in result.steps:
+            self.journal.record("plane_event",
+                                event=serialize_event(step))
+        self.journal.record("plane_event",
+                            event=serialize_event(result.summary))
+        if result.committed:
+            for name, planes in assignments.items():
+                self.planes.assign(name, planes)
+        record = result.record()
+        record["reason"] = reason
+        self.transitions.append(record)
+        return record
+
+    def _revert_plan(self, name: str, x_old: np.ndarray) -> None:
+        """Roll a tenant's committed plan back to `x_old` after a
+        rolled-back transition, certified on its CURRENT dag under the
+        fabric mask (the admission.repair keep-path conventions)."""
+        tenant = self.tenants[name]
+        x_old = np.asarray(x_old, dtype=np.int64)
+        problem = DESProblem(tenant.dag)
+        mask = self.health.local_mask(tenant.pods)
+        degraded = float(mask.min(initial=1.0)) < 1.0 - 1e-12
+        res = simulate(problem, x_old.astype(np.float64) * mask) \
+            if degraded else simulate(problem, x_old)
+        ideal = tenant.plan.ideal_comm_time
+        tenant.plan.x = x_old
+        tenant.plan.makespan = res.makespan
+        tenant.plan.comm_time = res.comm_time
+        tenant.plan.nct = res.comm_time / ideal if ideal > 0 \
+            else float("inf")
+        tenant.base_plan = tenant.plan.copy()
+        self.ledger.commit(name, tenant.fleet_usage(self.fleet.num_pods))
+        if degraded:
+            self._degraded.add(name)
+
+    def _sync_planes(self) -> None:
+        """End-of-event safety net: every tenant whose committed plan.x
+        is not what its book entry sums to gets a fresh deterministic
+        split.  This covers the atomic-exempt paths -- arrival's initial
+        assignment, grant revocation restoring base plans, seizure
+        shrinks -- where no incumbent circuits move plane-by-plane.
+        Unsplittable plans leave no entry (a pure atomic tenant)."""
+        if not self.staggered:
+            return
+        for name in sorted(set(self.planes.lanes) - set(self.tenants)):
+            self.planes.pop(name)
+        for name in sorted(self.tenants):
+            tenant = self.tenants[name]
+            if tenant.plan is None:
+                continue
+            x = np.asarray(tenant.plan.x, dtype=np.int64)
+            total = self.planes.total(name)
+            if total is not None and np.array_equal(total, x):
+                continue
+            planes = split_plan(x, self._tenant_budgets(name, tenant.pods))
+            if planes is None:
+                self.planes.pop(name)
+            else:
+                self.planes.assign(name, planes)
 
     # -------------------------------------------------------- surplus pass
     def revoke_grants(self) -> int:
@@ -456,7 +640,18 @@ class FleetPlanner:
             self.realloc_batches += res.batch_calls
             self.realloc_candidates += res.num_candidates
             nct_before = tenant.plan.nct
-            if res.improved:
+            improved = res.improved
+            transition = None
+            if improved:
+                # stagger the boost BEFORE committing it; a rolled-back
+                # transition declines the boost (plan unchanged, the
+                # grant goes back to the pool below)
+                transition = self._apply_staggered(
+                    {tenant.name: (tenant.plan.x, res.x)}, "surplus")
+                if transition is not None \
+                        and transition["status"] == "rolled_back":
+                    improved = False
+            if improved:
                 tenant.plan.x = res.x
                 tenant.plan.makespan = res.makespan
                 tenant.plan.comm_time = res.comm_time
@@ -467,12 +662,15 @@ class FleetPlanner:
             acct = self.ledger.account(tenant.name)
             returned = self.ledger.reclaim(
                 tenant.name, np.minimum(acct.granted, acct.surplus))
-            outcomes.append({
+            outcome = {
                 "tenant": tenant.name, "granted": int(g.sum()),
                 "kept": int(g.sum() - returned.sum()),
                 "nct_before": nct_before, "nct_after": tenant.plan.nct,
-                "improved": res.improved,
-                "candidates": res.num_candidates})
+                "improved": improved,
+                "candidates": res.num_candidates}
+            if transition is not None:
+                outcome["transition"] = transition
+            outcomes.append(outcome)
         return outcomes
 
     # ---------------------------------------------------- crash recovery
@@ -486,6 +684,9 @@ class FleetPlanner:
         return {
             "ledger": self.ledger.snapshot(),
             "health": self.health.snapshot(),
+            "planes": self.planes.snapshot(),
+            "transition_seq": self._transition_seq,
+            "transitions": list(self.transitions),
             "rng_state": self.rng.bit_generator.state,
             "dwell_estimates": dict(self.dwell_estimates),
             "degraded": sorted(self._degraded),
@@ -524,6 +725,12 @@ class FleetPlanner:
         planner.ledger = PortLedger.from_snapshot(snap["ledger"])
         planner.admission.ledger = planner.ledger
         planner.health = FabricHealth.from_snapshot(snap["health"])
+        # pre-v3 snapshots carry no plane book; `_sync_planes` rebuilds it
+        # deterministically on the next handled event
+        if "planes" in snap:
+            planner.planes = PlaneBook.from_snapshot(snap["planes"])
+        planner._transition_seq = int(snap.get("transition_seq", 0))
+        planner.transitions = list(snap.get("transitions", []))
         planner.rng = np.random.default_rng(0)
         planner.rng.bit_generator.state = snap["rng_state"]
         planner.dwell_estimates = {
@@ -609,6 +816,19 @@ class FleetPlanner:
                         "candidates": self.realloc_candidates,
                         "granted_ports": int(
                             sc.delta("fleet_granted_ports_total"))},
+            "planes": {
+                "staggered": self.staggered,
+                "num_planes": self.num_planes,
+                "tracked": sorted(self.planes.lanes),
+                "transitions": len(self.transitions),
+                "committed": sum(t["status"] == "committed"
+                                 for t in self.transitions),
+                "rolled_back": sum(t["status"] == "rolled_back"
+                                   for t in self.transitions),
+                "rewire_steps": int(sc.delta("planes_rewire_steps_total")),
+                "peak_inflation": max(
+                    (t["peak_inflation"] for t in self.transitions),
+                    default=1.0)},
         }
 
 

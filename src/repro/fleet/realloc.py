@@ -111,6 +111,19 @@ def circuit_changes(x_new: np.ndarray, x_old: np.ndarray) -> int:
     return int(np.triu(d, k=1).sum())
 
 
+def plane_circuit_changes(planes_new: np.ndarray,
+                          planes_old: np.ndarray) -> np.ndarray:
+    """Per-plane rewire sizes between two (k, P, P) lane decompositions:
+    entry p is the `circuit_changes` of plane p alone, i.e. the work (and
+    dark time) of that plane's step in a staggered transition."""
+    a = np.asarray(planes_new, np.int64)
+    b = np.asarray(planes_old, np.int64)
+    if a.shape != b.shape or a.ndim != 3:
+        raise ValueError(f"plane stacks disagree: {a.shape} vs {b.shape}")
+    d = np.abs(a - b)
+    return np.triu(d, k=1).sum(axis=(1, 2)).astype(np.int64)
+
+
 def _edge_arrays(pairs) -> tuple[np.ndarray, np.ndarray]:
     earr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
     return earr[:, 0], earr[:, 1]

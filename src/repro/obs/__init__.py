@@ -26,16 +26,17 @@ from repro.obs.logs import get_logger, setup_logging
 from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
                                MetricsRegistry, RegistryScope, get_counter,
                                get_gauge, get_histogram)
-from repro.obs.timeline import (schedule_timeline, slack_report, task_slack,
-                                validate_trace, write_trace)
+from repro.obs.timeline import (plane_rewire_timeline, schedule_timeline,
+                                slack_report, task_slack, validate_trace,
+                                write_trace)
 from repro.obs.tracing import TRACER, SpanRecord, Tracer, enabled, span
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "RegistryScope",
     "REGISTRY", "get_counter", "get_gauge", "get_histogram",
     "Tracer", "TRACER", "SpanRecord", "span", "enabled",
-    "schedule_timeline", "slack_report", "task_slack", "validate_trace",
-    "write_trace",
+    "plane_rewire_timeline", "schedule_timeline", "slack_report",
+    "task_slack", "validate_trace", "write_trace",
     "FleetJournal", "serialize_event", "rebuild_event",
     "get_logger", "setup_logging",
 ]

@@ -28,8 +28,9 @@ import numpy as np
 from repro.core.dag import VIRTUAL, CommDAG
 from repro.core.des import DESProblem, DESResult, simulate
 
-__all__ = ["interval_rate_matrices", "schedule_timeline", "slack_report",
-           "task_slack", "validate_trace", "write_trace"]
+__all__ = ["interval_rate_matrices", "plane_rewire_timeline",
+           "schedule_timeline", "slack_report", "task_slack",
+           "validate_trace", "write_trace"]
 
 INF = float("inf")
 
@@ -218,6 +219,62 @@ def schedule_timeline(dag: CommDAG, x: np.ndarray,
                           "comm_time_s": float(result.comm_time),
                           "critical_path": rep["critical_path"],
                           "total_ports": int(np.asarray(x).sum())}}
+
+
+def plane_rewire_timeline(steps, summary=None,
+                          time_scale: float = 1e6) -> dict:
+    """Chrome trace-event JSON of one staggered plane transition.
+
+    One track per OCS plane; each `PlaneRewireStep` is a complete (``X``)
+    event on its plane's track spanning that plane's dark window
+    (``ts`` = cumulative reconfiguration delay of the preceding steps,
+    ``dur`` = the step's own delay), rollback steps color-coded red.  A
+    counter track charts the certified peak inflation the SLO check saw
+    at every step.  Pass the transition's `PlaneTransitionSummary` to
+    stamp the outcome into ``otherData``.
+    """
+    steps = list(steps)
+    if not steps:
+        raise ValueError("cannot export a timeline without steps")
+    tname = steps[0].transition
+    events: list[dict] = [
+        {"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+         "args": {"name": f"staggered transition {tname}"}}]
+    for plane in sorted({s.plane for s in steps}):
+        events.append({"name": "thread_name", "ph": "M", "pid": 0,
+                       "tid": plane, "args": {"name": f"plane {plane}"}})
+        events.append({"name": "thread_sort_index", "ph": "M", "pid": 0,
+                       "tid": plane, "args": {"sort_index": plane}})
+    t = 0.0
+    for s in steps:
+        # a rollback step un-rewires a plane; it pops red in the trace
+        cname = _COLOR_CRITICAL if s.direction == "rollback" \
+            else "thread_state_running"
+        events.append({
+            "name": f"{s.direction}#{s.seq}", "ph": "X", "pid": 0,
+            "tid": int(s.plane), "ts": t * time_scale,
+            "dur": max(float(s.delay_s), 0.0) * time_scale,
+            "cname": cname,
+            "args": {"seq": int(s.seq), "direction": s.direction,
+                     "plane": int(s.plane),
+                     "changed_circuits": int(s.changed_circuits),
+                     "peak_inflation": float(s.peak_inflation)}})
+        events.append({
+            "name": "peak_inflation", "ph": "C", "pid": 0, "tid": 0,
+            "ts": t * time_scale,
+            "args": {"inflation": round(float(s.peak_inflation), 6)}})
+        t += float(s.delay_s)
+    events.append({"name": "peak_inflation", "ph": "C", "pid": 0,
+                   "tid": 0, "ts": t * time_scale,
+                   "args": {"inflation": 1.0}})
+    other = {"transition": tname, "total_delay_s": float(t),
+             "steps": len(steps)}
+    if summary is not None:
+        other["outcome"] = summary.outcome
+        other["peak_inflation"] = float(summary.peak_inflation)
+        other["tenants"] = list(summary.tenants)
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": other}
 
 
 def validate_trace(trace: dict) -> list[str]:

@@ -153,8 +153,10 @@ def test_telemetry_events_round_trip_json():
     p = PhaseTransition(t=2.0, tenant="t", phase="B")
     for ev in (s, p):
         data = json.loads(json.dumps(serialize_event(ev)))
-        assert data["v"] == 2
+        assert data["v"] == 3
         assert rebuild_event(data) == ev
+        # v2 journals (pre-planes) must still rebuild unchanged
+        assert rebuild_event({**data, "v": 2}) == ev
 
 
 # --------------------------------------------------------------- steering
